@@ -1,0 +1,59 @@
+"""Shared benchmark helpers: wall-time per element + HLO op-count 'area'.
+
+FPGA latency/LUTs do not exist on this target, so the Fig. 1-4 analogs
+report (DESIGN.md §2):
+  latency  -> ns/element of the jit'd vectorized codec (throughput form)
+  LUTs     -> op count of the optimized HLO (vector-op 'area' proxy),
+              plus the dependency-chain depth where meaningful.
+"""
+
+from __future__ import annotations
+
+import re
+import time
+
+import jax
+import numpy as np
+
+WARMUP = 3
+REPS = 10
+
+
+def time_fn(fn, *args) -> float:
+    """Median wall seconds of fn(*args) after jit warmup."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    for _ in range(WARMUP - 1):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "copy", "after-all"}
+
+
+def hlo_op_census(fn, *args) -> dict:
+    """Op histogram of the optimized HLO (the 'area' proxy)."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    text = compiled.as_text()
+    ops: dict = {}
+    for line in text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^)]*\)|\S+)\s+"
+                     r"([a-z0-9\-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(1)
+        if op in _SKIP_OPS:
+            continue
+        ops[op] = ops.get(op, 0) + 1
+    ops["__total__"] = sum(v for k, v in ops.items() if k != "__total__")
+    return ops
+
+
+def csv_line(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.4f},{derived}"

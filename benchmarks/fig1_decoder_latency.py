@@ -1,0 +1,56 @@
+"""Fig. 1 analog: decoder 'latency' (ns/element, vectorized throughput).
+
+Compares the takum decoders (linear + logarithmic, direct production path)
+against the posit baselines (FloPoCo-SM and FloPoCo-2C dataflows) across
+word widths. The paper's claim to reproduce: takum decode cost is flat in
+n (fixed 12-bit header window), posit cost grows (full-width CLZ+shift),
+with takum up to ~38% faster at large n on FPGA.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.core import posit, takum
+from benchmarks.common import csv_line, time_fn
+
+N_ELEMS = 1 << 20
+WIDTHS = [8, 16, 32]
+
+
+def _words(n, count=N_ELEMS, seed=0):
+    rng = np.random.default_rng(seed)
+    from repro.core.bitops import word_dtype
+    w = rng.integers(0, 1 << n, size=count, dtype=np.int64)
+    return jax.numpy.asarray(w.astype(np.uint32)).astype(word_dtype(n))
+
+
+DECODERS = {
+    "takum-linear": lambda w, n: takum.decode_linear(w, n)[:3],
+    "takum-log": lambda w, n: takum.decode_lns(w, n)[:2],
+    "takum-linear-hw": lambda w, n: takum.decode(w, n, output_exponent=True,
+                                                 hw_path=True)[:3],
+    "posit-sm": lambda w, n: posit.decode_sm(w, n)[:3],
+    "posit-2c": lambda w, n: posit.decode_2c(w, n)[:3],
+}
+
+
+def run(print_fn=print):
+    rows = []
+    for n in WIDTHS:
+        w = _words(n)
+        for name, fn in DECODERS.items():
+            jfn = jax.jit(functools.partial(fn, n=n))
+            sec = time_fn(jfn, w)
+            ns_per_elem = sec / N_ELEMS * 1e9
+            rows.append((name, n, ns_per_elem))
+            print_fn(csv_line(f"fig1/{name}/n{n}", sec * 1e6,
+                              f"ns_per_elem={ns_per_elem:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Fig. 2 analog: decoder 'area' = optimized-HLO op count (vector-op
+census). The paper's claim: takum decoder LUT usage is up to 50% below
+the best posit decoder and grows much more slowly with n."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core import posit, takum
+from benchmarks.common import csv_line, hlo_op_census
+from benchmarks.fig1_decoder_latency import DECODERS, _words
+
+WIDTHS = [8, 16, 32]
+
+
+def run(print_fn=print):
+    rows = []
+    for n in WIDTHS:
+        w = _words(n, count=1 << 12)
+        for name, fn in DECODERS.items():
+            census = hlo_op_census(functools.partial(fn, n=n), w)
+            total = census["__total__"]
+            rows.append((name, n, total))
+            print_fn(csv_line(f"fig2/{name}/n{n}", float(total),
+                              f"hlo_ops={total}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

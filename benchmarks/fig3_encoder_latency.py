@@ -1,0 +1,67 @@
+"""Fig. 3 analog: encoder latency (ns/element). Both takum encoders do
+full RNE rounding with saturation; so does our posit baseline (stricter
+than the paper's comparison, where FloPoCo-2C lacked rounding — noted in
+DESIGN.md §2). Claim to reproduce: takum encoder latency is roughly flat
+in n (max shift offset 7), posit encode grows with the full-width shifts."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.core import posit, takum
+from repro.core.takum import frac_width
+from benchmarks.common import csv_line, time_fn
+
+N_ELEMS = 1 << 20
+WIDTHS = [8, 16, 32]
+
+
+def _internal_rep(n, count=N_ELEMS, seed=0):
+    rng = np.random.default_rng(seed)
+    s = jax.numpy.asarray(rng.integers(0, 2, count, dtype=np.int32))
+    c = jax.numpy.asarray(rng.integers(-255, 255, count, dtype=np.int32))
+    e = jax.numpy.asarray(rng.integers(-4 * (n - 2), 4 * (n - 2), count,
+                                       dtype=np.int32))
+    mant = jax.numpy.asarray(
+        rng.integers(0, 1 << (n - 5), count, dtype=np.int64).astype(
+            np.uint32))
+    return s, c, e, mant
+
+
+def encoders(n):
+    return {
+        "takum-linear": lambda s, c, e, m: takum.encode_linear(
+            s, e, m, n, wm=n - 5 if n >= 12 else 7),
+        "takum-log": lambda s, c, e, m: takum.encode(
+            s, c, m, n, wm=n - 5 if n >= 12 else 7),
+        # hw path needs the (n+7)-bit extended takum to fit the 32-bit lane
+        "takum-linear-hw": (lambda s, c, e, m: takum.encode(
+            s, c, m, n, wm=n - 5, hw_path=True)) if 12 <= n <= 25 else None,
+        "posit-2c-rounding": lambda s, c, e, m: posit.encode(
+            s, e, m, n, wm=n - 5 if n >= 12 else 7),
+    }
+
+
+def run(print_fn=print):
+    rows = []
+    for n in WIDTHS:
+        s, c, e, m = _internal_rep(n)
+        wm = n - 5 if n >= 12 else 7
+        m = m & ((1 << wm) - 1)
+        for name, fn in encoders(n).items():
+            if fn is None:
+                continue
+            jfn = jax.jit(fn)
+            sec = time_fn(jfn, s, c, e, m)
+            ns = sec / N_ELEMS * 1e9
+            rows.append((name, n, ns))
+            print_fn(csv_line(f"fig3/{name}/n{n}", sec * 1e6,
+                              f"ns_per_elem={ns:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

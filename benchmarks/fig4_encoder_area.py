@@ -1,0 +1,29 @@
+"""Fig. 4 analog: encoder 'area' = optimized-HLO op count."""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_line, hlo_op_census
+from benchmarks.fig3_encoder_latency import _internal_rep, encoders
+
+WIDTHS = [8, 16, 32]
+
+
+def run(print_fn=print):
+    rows = []
+    for n in WIDTHS:
+        s, c, e, m = _internal_rep(n, count=1 << 12)
+        wm = n - 5 if n >= 12 else 7
+        m = m & ((1 << wm) - 1)
+        for name, fn in encoders(n).items():
+            if fn is None:
+                continue
+            census = hlo_op_census(fn, s, c, e, m)
+            total = census["__total__"]
+            rows.append((name, n, total))
+            print_fn(csv_line(f"fig4/{name}/n{n}", float(total),
+                              f"hlo_ops={total}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""n=64 codec benchmarks (the paper's largest width) — runs standalone
+with x64 enabled (uint64 lanes), invoked as a subprocess by run.py.
+
+    PYTHONPATH=src:. python -m benchmarks.fig_n64
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import functools  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from repro.core import posit, takum  # noqa: E402
+from benchmarks.common import csv_line, hlo_op_census, time_fn  # noqa: E402
+
+N = 64
+N_ELEMS = 1 << 19
+
+
+def _words():
+    rng = np.random.default_rng(0)
+    return jax.numpy.asarray(
+        rng.integers(0, 1 << 63, N_ELEMS, dtype=np.uint64)
+        | (rng.integers(0, 2, N_ELEMS, dtype=np.uint64) << 63))
+
+
+def run(print_fn=print):
+    w = _words()
+    decs = {
+        "takum-linear": lambda x: takum.decode_linear(x, N)[:3],
+        "takum-log": lambda x: takum.decode_lns(x, N)[:2],
+        "posit-sm": lambda x: posit.decode_sm(x, N)[:3],
+        "posit-2c": lambda x: posit.decode_2c(x, N)[:3],
+    }
+    for name, fn in decs.items():
+        jfn = jax.jit(fn)
+        sec = time_fn(jfn, w)
+        ops = hlo_op_census(fn, w[:4096])["__total__"]
+        print_fn(csv_line(
+            f"fig1/{name}/n64", sec * 1e6,
+            f"ns_per_elem={sec / N_ELEMS * 1e9:.3f};hlo_ops={ops}"))
+
+    rng = np.random.default_rng(1)
+    s = jax.numpy.asarray(rng.integers(0, 2, N_ELEMS, dtype=np.int32))
+    c = jax.numpy.asarray(rng.integers(-255, 255, N_ELEMS, dtype=np.int32))
+    e = jax.numpy.asarray(rng.integers(-240, 240, N_ELEMS, dtype=np.int32))
+    m = jax.numpy.asarray(rng.integers(0, 1 << 59, N_ELEMS, dtype=np.uint64))
+    encs = {
+        "takum-linear": lambda s, c, e, m: takum.encode_linear(
+            s, e, m, N, wm=N - 5),
+        "takum-log": lambda s, c, e, m: takum.encode(s, c, m, N, wm=N - 5),
+        "posit-2c-rounding": lambda s, c, e, m: posit.encode(
+            s, e, m, N, wm=N - 5),
+    }
+    for name, fn in encs.items():
+        jfn = jax.jit(fn)
+        sec = time_fn(jfn, s, c, e, m)
+        ops = hlo_op_census(fn, s[:4096], c[:4096], e[:4096],
+                            m[:4096])["__total__"]
+        print_fn(csv_line(
+            f"fig3/{name}/n64", sec * 1e6,
+            f"ns_per_elem={sec / N_ELEMS * 1e9:.3f};hlo_ops={ops}"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Weight-only-quantised matmul: HBM bytes and accuracy vs dense f32/bf16.
+
+Serving decode shapes are weight-bandwidth-bound; the takum decode-matmul
+moves n/32 of the f32 weight bytes. On this CPU host we report the
+analytic byte ratio (what the TPU roofline sees) plus measured wall time
+of the XLA decode+matmul path and the quantisation error.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import takum
+from repro.kernels import ops, ref
+from benchmarks.common import csv_line, time_fn
+
+M, K, N = 64, 2048, 2048  # decode-ish: small M, big weights
+
+
+def run(print_fn=print):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    w = rng.normal(size=(K, N)).astype(np.float32) / np.sqrt(K)
+    rows = []
+
+    dense = jax.jit(lambda a, b: a @ b)
+    t_dense = time_fn(dense, x, jnp.asarray(w))
+    print_fn(csv_line("qmm/dense-f32", t_dense * 1e6,
+                      f"bytes_w={K * N * 4}"))
+
+    for n in (16, 8):
+        w_words = takum.float_to_takum(w, n)
+        qmm = jax.jit(lambda a, ww, n=n: ops.quant_matmul(a, ww, n, False,
+                                                          None))
+        t_q = time_fn(qmm, x, w_words)
+        out = np.asarray(qmm(x, w_words))
+        refo = np.asarray(x) @ w
+        rel = np.linalg.norm(out - refo) / np.linalg.norm(refo)
+        bytes_w = K * N * n // 8
+        rows.append((n, t_q, rel))
+        print_fn(csv_line(
+            f"qmm/takum{n}-weights", t_q * 1e6,
+            f"bytes_w={bytes_w};hbm_ratio={4 * 8 / n:.1f}x;rel_err={rel:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Logarithmic-takum arithmetic demo (the paper's Section III internal
+representation in action): exact LNS multiply/divide/sqrt as fixed-point
+adds/shifts on ell_bar, Gauss-log addition, and an LNS-multiply /
+linear-accumulate matmul.
+
+    PYTHONPATH=src python examples/lns_matmul.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lns, takum
+
+
+def main():
+    n = 16
+    wf = takum.frac_width(n)
+    rng = np.random.default_rng(0)
+
+    a = jnp.asarray(rng.normal(size=64).astype(np.float32) * 5)
+    b = jnp.asarray(rng.normal(size=64).astype(np.float32) + 2.0)
+    ta = lns.from_words(takum.float_to_lns_takum(a, n), n)
+    tb = lns.from_words(takum.float_to_lns_takum(b, n), n)
+
+    prod = takum.lns_takum_to_float(
+        lns.to_words(lns.mul(ta, tb, wf=wf), n, wf=wf), n)
+    print("LNS multiply rel err:",
+          float(jnp.median(jnp.abs(prod - a * b) / jnp.abs(a * b))))
+
+    s = takum.lns_takum_to_float(
+        lns.to_words(lns.add(ta, tb, wf=wf), n, wf=wf), n)
+    print("LNS Gauss-add rel err:",
+          float(jnp.median(jnp.abs(s - (a + b)) /
+                           jnp.maximum(jnp.abs(a + b), 1e-3))))
+
+    x = rng.normal(size=(16, 32)).astype(np.float32)
+    w = rng.normal(size=(32, 8)).astype(np.float32)
+    out = lns.lns_matmul(takum.float_to_lns_takum(x, n),
+                         takum.float_to_lns_takum(w, n), n)
+    ref = x @ w
+    rel = np.linalg.norm(np.asarray(out) - ref) / np.linalg.norm(ref)
+    print(f"LNS matmul (mul=adds in ell_bar, linear accumulate): "
+          f"rel err {rel:.4f}")
+    print("\n(Multiplies in the barred-ell_bar domain are exact integer "
+          "adds — the Section III representation never needs a two's-"
+          "complement negation around the codec.)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: the takum codec as a tensor format in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import posit, takum
+from repro.core.quant import QuantSpec, quantize, dequantize
+
+
+def main():
+    print("=== takum codec quickstart ===\n")
+
+    # 1. encode/decode a tensor through takum16
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 4)) * 100,
+                    jnp.float32)
+    words = takum.float_to_takum(x, 16)
+    back = takum.takum_to_float(words, 16)
+    print("x[0]      :", np.asarray(x)[0])
+    print("takum16[0]:", np.asarray(words)[0], f"({words.dtype})")
+    print("decoded[0]:", np.asarray(back)[0])
+    print("max rel err:", float(jnp.max(jnp.abs(back - x) / jnp.abs(x))))
+
+    # 2. the paper's headline: bounded header => huge dynamic range.
+    wide = jnp.asarray([1e-30, 1e-9, 1.0, 1e9, 1e30], jnp.float32)
+    t8 = takum.takum_to_float(takum.float_to_takum(wide, 8), 8)
+    p8 = posit.posit_to_float(posit.float_to_posit(wide, 8), 8)
+    print("\nwide range     :", np.asarray(wide))
+    print("through takum8 :", np.asarray(t8))
+    print("through posit8 :", np.asarray(p8), "(posit saturates early)")
+
+    # 3. total order + negation = two's complement (posit-like properties)
+    w = takum.float_to_takum(jnp.asarray([3.25], jnp.float32), 16)
+    neg = (-w.astype(jnp.int32)).astype(jnp.uint16)
+    print("\n-3.25 via two's complement of the word:",
+          float(takum.takum_to_float(neg, 16)[0]))
+
+    # 4. the barred-LNS internal representation (Section III of the paper)
+    lw = takum.float_to_lns_takum(jnp.asarray([2.718281828], jnp.float32), 16)
+    dec = takum.decode_lns(lw, 16)
+    print("\nln-domain: ell_bar(e) =",
+          float(dec.ell_bar[0]) / 2 ** takum.frac_width(16),
+          "(should be ~2: tau = sqrt(e)^ell)")
+
+    # 5. tensor quantisation API
+    qt = quantize(x, QuantSpec(fmt="takum", n=8, scale="per_tensor"))
+    print("\nQTensor: wire bytes", qt.nbytes_wire, "vs f32", x.size * 4)
+    print("dequant err:",
+          float(jnp.max(jnp.abs(dequantize(qt) - x))))
+
+
+if __name__ == "__main__":
+    main()

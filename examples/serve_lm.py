@@ -1,0 +1,48 @@
+"""Batched serving demo: prefill + decode with takum-quantised weights and
+KV cache, comparing output agreement and wire sizes.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import model
+from repro.serve.engine import ServeEngine, quantize_weights
+
+
+def main():
+    cfg = dataclasses.replace(get_arch("phi3-medium-14b").reduced,
+                              n_layers=4, d_model=128, n_heads=8,
+                              n_kv_heads=4, d_ff=512, head_dim=16,
+                              vocab=4096)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab, 12)) for _ in range(4)]
+
+    eng = ServeEngine(params, cfg, max_len=64)
+    base = eng.generate(prompts, max_new=8)
+    print("baseline    :", [o[-8:] for o in base])
+
+    # takum8 weight-only quantisation
+    qparams = quantize_weights(params, "takum8")
+    eng8 = ServeEngine(qparams, cfg, max_len=64)
+    out8 = eng8.generate(prompts, max_new=8)
+    agree = np.mean([a[-8:] == b[-8:] for a, b in zip(base, out8)])
+    print(f"takum8-w    : {[o[-8:] for o in out8]}  (seq agreement "
+          f"{agree:.0%}, weight bytes /4)")
+
+    # takum16 KV cache
+    cfg16 = dataclasses.replace(cfg, kv_quant="takum16")
+    eng16 = ServeEngine(params, cfg16, max_len=64)
+    out16 = eng16.generate(prompts, max_new=8)
+    agree = np.mean([a[-8:] == b[-8:] for a, b in zip(base, out16)])
+    print(f"takum16-kv  : {[o[-8:] for o in out16]}  (seq agreement "
+          f"{agree:.0%}, KV bytes /2)")
+
+
+if __name__ == "__main__":
+    main()

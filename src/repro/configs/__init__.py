@@ -1,0 +1,18 @@
+"""Arch registry: importing this package registers all assigned configs."""
+
+from repro.configs import (  # noqa: F401
+    recurrentgemma_2b,
+    nemotron_4_340b,
+    phi3_medium_14b,
+    starcoder2_15b,
+    minitron_4b,
+    rwkv6_1_6b,
+    granite_moe_3b_a800m,
+    kimi_k2_1t_a32b,
+    llama_3_2_vision_11b,
+    seamless_m4t_large_v2,
+)
+from repro.configs.base import (  # noqa: F401
+    ArchSpec, ModelConfig, QuantConfig, RuntimeConfig, ShapeConfig, SHAPES,
+    get_arch, list_archs, register_arch, shape_applicable,
+)

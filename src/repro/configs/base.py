@@ -1,0 +1,187 @@
+"""Config system: model / shape / runtime dataclasses + arch registry.
+
+Every assigned architecture registers an exact ``ModelConfig`` under its
+pool id (``--arch <id>``); shapes are the four assigned input-shape sets.
+``reduced()`` produces the family-preserving small config used by the CPU
+smoke tests (the full configs are exercised via the AOT dry-run only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+__all__ = ["ModelConfig", "ShapeConfig", "QuantConfig", "RuntimeConfig",
+           "register_arch", "get_arch", "list_archs", "SHAPES",
+           "shape_applicable"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | hybrid_rglru | rwkv6 | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                 # query heads (0 for attention-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    activation: str = "swiglu"   # swiglu | relu2 | gelu
+    norm: str = "rmsnorm"
+    rope_base: float = 10_000.0
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # hybrid (RecurrentGemma): block pattern, e.g. ("rec", "rec", "attn")
+    block_pattern: Tuple[str, ...] = ()
+    lru_width: int = 0
+    window: int = 0              # sliding-window size for local attention
+    # rwkv6
+    rwkv_head_dim: int = 64
+    # enc-dec
+    n_enc_layers: int = 0        # encoder layers (encdec family)
+    # vlm
+    cross_attn_every: int = 0    # insert a cross-attn layer every k layers
+    n_media_tokens: int = 1601   # stubbed frontend sequence length
+    d_media: int = 0             # media embedding dim (0 -> d_model)
+    # modality frontend stub: 'none' | 'vision' | 'audio'
+    frontend: str = "none"
+    dtype: str = "bf16"          # activation compute dtype
+    param_dtype: str = "f32"
+    # serving: KV-cache wire format ('none' | 'takum8' | 'takum16')
+    kv_quant: str = "none"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    def param_count(self) -> int:
+        """Total parameter count (used for 6ND model flops)."""
+        d, ff, V = self.d_model, self.d_ff, self.vocab
+        hd = self.hd
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+            + self.n_heads * hd * d
+        if self.activation == "swiglu":
+            mlp = 3 * d * ff
+        else:
+            mlp = 2 * d * ff
+        if self.family == "moe":
+            mlp = self.n_experts * (3 * d * ff) + d * self.n_experts
+        per_layer = attn + mlp + 2 * d
+        if self.family == "rwkv6":
+            # time-mix ~ 5 d^2-ish projections + decay MLPs, channel-mix 2*d*ff
+            per_layer = 5 * d * d + 2 * d * ff + 2 * d
+        if self.family == "hybrid_rglru":
+            n_attn = sum(1 for i in range(self.n_layers)
+                         if self._block_kind(i) == "attn")
+            n_rec = self.n_layers - n_attn
+            rec = 3 * d * self.lru_width + 2 * self.lru_width * \
+                (self.lru_width // 256 or 1)  # conv/gates approx
+            attn_l = attn + mlp + 2 * d
+            rec_l = rec + mlp + 2 * d
+            total = n_attn * attn_l + n_rec * rec_l
+            total += V * d * (1 if self.tie_embeddings else 2)
+            return total
+        total = self.n_layers * per_layer
+        if self.family == "encdec":
+            total += self.n_enc_layers * per_layer  # + cross-attn below
+            total += self.n_layers * (2 * d * self.n_kv_heads * hd
+                                      + d * self.n_heads * hd)
+        if self.family == "vlm" and self.cross_attn_every:
+            n_cross = self.n_layers // self.cross_attn_every
+            total += n_cross * (attn + mlp + 2 * d)
+        total += V * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        dense = self.param_count() - self.n_layers * self.n_experts * 3 * d * ff
+        return dense + self.n_layers * self.top_k * 3 * d * ff
+
+    def _block_kind(self, i: int) -> str:
+        if not self.block_pattern:
+            return "attn"
+        return self.block_pattern[i % len(self.block_pattern)]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell runs; reason when skipped (DESIGN.md §5).
+
+    long_500k requires sub-quadratic sequence mixing: only the SSM/hybrid
+    families qualify; pure full-attention archs skip it.
+    """
+    if shape.name == "long_500k" and cfg.family not in ("rwkv6",
+                                                        "hybrid_rglru"):
+        return False, "long_500k skipped: pure full-attention architecture"
+    return True, ""
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    weights: str = "none"      # 'none' | 'takum8' | 'takum16' | 'posit16' ...
+    kv_cache: str = "none"
+    grad_allreduce: str = "none"   # cross-pod gradient compression
+    checkpoint: str = "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    multi_pod: bool = False
+    remat: str = "block"       # 'none' | 'block' (per-layer rematerialisation)
+    zero1: bool = True         # shard optimizer state over data axes
+    microbatch: int = 0        # 0 = no microbatching
+    seq_shard: bool = True     # sequence/context parallel annotations
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+
+
+_REGISTRY: Dict[str, Callable[[], "ArchSpec"]] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    config: ModelConfig
+    reduced: ModelConfig    # small same-family config for CPU smoke tests
+    source: str             # provenance string from the assignment table
+
+
+def register_arch(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_arch(name: str) -> ArchSpec:
+    if name not in _REGISTRY:
+        # import the configs package lazily so registration side effects run
+        import repro.configs  # noqa: F401
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs():
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

@@ -1,0 +1,27 @@
+"""nemotron-4-340b [dense]: GQA, squared-ReLU MLP. [arXiv:2402.16819]"""
+
+import dataclasses
+
+from repro.configs.base import ArchSpec, ModelConfig, register_arch
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18_432,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=73_728,
+    vocab=256_000,
+    head_dim=192,
+    activation="relu2",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, n_layers=3, d_model=96, n_heads=6, n_kv_heads=2, d_ff=384,
+    vocab=512, head_dim=16, dtype="f32")
+
+
+@register_arch("nemotron-4-340b")
+def spec() -> ArchSpec:
+    return ArchSpec(CONFIG, REDUCED, "arXiv:2402.16819; unverified")

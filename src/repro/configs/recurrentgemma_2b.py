@@ -1,0 +1,32 @@
+"""recurrentgemma-2b [hybrid]: RG-LRU + local attention, pattern 2 rec : 1
+attn. [arXiv:2402.19427; hf]"""
+
+import dataclasses
+
+from repro.configs.base import ArchSpec, ModelConfig, register_arch
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid_rglru",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,          # MQA
+    d_ff=7680,
+    vocab=256_000,
+    head_dim=256,
+    activation="gelu",
+    block_pattern=("rec", "rec", "attn"),
+    lru_width=2560,
+    window=2048,
+    tie_embeddings=True,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, n_layers=5, d_model=64, n_heads=2, n_kv_heads=1, d_ff=128,
+    vocab=512, head_dim=32, lru_width=64, window=32, dtype="f32")
+
+
+@register_arch("recurrentgemma-2b")
+def spec() -> ArchSpec:
+    return ArchSpec(CONFIG, REDUCED, "arXiv:2402.19427; hf")

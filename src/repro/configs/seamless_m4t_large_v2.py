@@ -1,0 +1,33 @@
+"""seamless-m4t-large-v2 [audio]: enc-dec, multimodal. Audio frontend is a
+STUB: input_specs() supplies precomputed frame embeddings [B, T_a, 1024]
+with T_a = seq_len // 4. 24L interpreted as 24 encoder + 24 decoder layers
+(matching the real w2v-BERT-24 + NLLB-24 structure; DESIGN.md §9).
+[arXiv:2308.11596; hf]"""
+
+import dataclasses
+
+from repro.configs.base import ArchSpec, ModelConfig, register_arch
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,            # decoder layers
+    n_enc_layers=24,        # encoder layers
+    d_model=1_024,
+    n_heads=16,
+    n_kv_heads=16,          # MHA
+    d_ff=8_192,
+    vocab=256_206,
+    head_dim=64,
+    activation="gelu",
+    frontend="audio",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, n_layers=2, n_enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=512, head_dim=16, dtype="f32")
+
+
+@register_arch("seamless-m4t-large-v2")
+def spec() -> ArchSpec:
+    return ArchSpec(CONFIG, REDUCED, "arXiv:2308.11596; hf")

@@ -1,0 +1,137 @@
+"""Barred-ell_bar LNS arithmetic on logarithmic takums (Section III).
+
+The paper's novel internal representation (10), ``(S, ell_bar)`` with
+``ell_bar = c + m = (-1)^S ell``, is monotonic in the mantissa, so the
+codec needs no two's-complement negations. This module demonstrates the
+claim that the *arithmetic* impact is minimal (§III): all sign cases of
+ell must be handled anyway, whether the unit stores ell or ell_bar.
+
+Operations are exact where LNS arithmetic is exact (multiply, divide,
+square root — fixed-point add/sub/shift on ell_bar) and use Gauss-log
+approximation for add/sub (in hardware: LUT + interpolation; here: f32
+evaluation, documented as the software stand-in).
+
+Values are carried as ``LnsTensor(s, ell_bar, is_zero, is_nar)`` with
+ell_bar in signed fixed point, ``wf`` fraction bits.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import takum
+from repro.core.takum import frac_width
+
+__all__ = ["LnsTensor", "from_words", "to_words", "mul", "div", "sqrt",
+           "add", "lns_matmul"]
+
+_ELL_MAX_INT = 255  # |ell_bar| < 255 by construction
+
+
+class LnsTensor(NamedTuple):
+    s: jnp.ndarray        # sign, int32 0/1
+    ell_bar: jnp.ndarray  # signed fixed point, wf fraction bits
+    is_zero: jnp.ndarray
+    is_nar: jnp.ndarray
+
+
+def from_words(words, n: int) -> LnsTensor:
+    d = takum.decode_lns(words, n)
+    return LnsTensor(d.s, d.ell_bar, d.is_zero, d.is_nar)
+
+
+def to_words(t: LnsTensor, n: int, *, wf: int):
+    return takum.encode_lns(t.s, t.ell_bar, n, wf=wf,
+                            is_zero=t.is_zero, is_nar=t.is_nar)
+
+
+def _ell(t: LnsTensor):
+    """Un-barred ell = (-1)^S ell_bar (sign handling, as §III notes, is
+    needed by the arithmetic regardless of representation)."""
+    return jnp.where(t.s == 1, -t.ell_bar, t.ell_bar)
+
+
+def _rebar(s, ell, is_zero, is_nar, wf: int):
+    lim = jnp.asarray(_ELL_MAX_INT << wf, ell.dtype)
+    ell = jnp.clip(ell, -lim, lim)  # saturate the dynamic range
+    ell_bar = jnp.where(s == 1, -ell, ell)
+    return LnsTensor(s.astype(jnp.int32), ell_bar, is_zero, is_nar)
+
+
+def mul(a: LnsTensor, b: LnsTensor, *, wf: int) -> LnsTensor:
+    """Exact: ell product = ell_a + ell_b; sign = XOR."""
+    s = a.s ^ b.s
+    ell = _ell(a) + _ell(b)
+    is_zero = a.is_zero | b.is_zero
+    is_nar = a.is_nar | b.is_nar
+    return _rebar(s, ell, is_zero & ~is_nar, is_nar, wf)
+
+
+def div(a: LnsTensor, b: LnsTensor, *, wf: int) -> LnsTensor:
+    """Exact: ell_a - ell_b. x/0 = NaR (takum semantics)."""
+    s = a.s ^ b.s
+    ell = _ell(a) - _ell(b)
+    is_nar = a.is_nar | b.is_nar | b.is_zero
+    return _rebar(s, ell, a.is_zero & ~is_nar, is_nar, wf)
+
+
+def sqrt(a: LnsTensor, *, wf: int) -> LnsTensor:
+    """Exact: right shift of ell (§III: 'the procedure remains unchanged'
+    under the barred representation). sqrt of negative = NaR."""
+    ell = _ell(a) >> 1
+    is_nar = a.is_nar | ((a.s == 1) & ~a.is_zero)
+    return _rebar(jnp.zeros_like(a.s), ell, a.is_zero & ~is_nar, is_nar, wf)
+
+
+def add(a: LnsTensor, b: LnsTensor, *, wf: int) -> LnsTensor:
+    """Gauss-log addition: a + b = sqrt(e)^(ell_a) (1 +- sqrt(e)^(d)).
+
+    Software stand-in for the hardware LUT/interpolator:
+    phi(d) = 2 ln(1 +- e^(d/2)) evaluated in f32 and re-quantised to the
+    fixed-point grid. |error| <= f32 eval error + 2^-wf-1.
+    """
+    ea, eb = _ell(a), _ell(b)
+    # order so that |larger| is the base; d <= 0
+    a_ge = ea >= eb
+    base_ell = jnp.where(a_ge, ea, eb)
+    base_s = jnp.where(a_ge, a.s, b.s)
+    other_s = jnp.where(a_ge, b.s, a.s)
+    d = (jnp.minimum(ea, eb) - base_ell).astype(jnp.float32) / (1 << wf)
+    same_sign = base_s == other_s
+    expd = jnp.exp(d * 0.5)
+    # 2*ln(1 + e^(d/2)) or 2*ln(1 - e^(d/2)); the latter -> -inf at d = 0
+    phi_add = 2.0 * jnp.log1p(expd)
+    phi_sub = 2.0 * jnp.log1p(-jnp.minimum(expd, 1.0 - 1e-7))
+    phi = jnp.where(same_sign, phi_add, phi_sub)
+    ell = base_ell + jnp.round(phi * (1 << wf)).astype(base_ell.dtype)
+    exact_cancel = ~same_sign & (d == 0.0)
+    # zero operands: a+0 = a
+    ell = jnp.where(a.is_zero, eb, jnp.where(b.is_zero, ea, ell))
+    s = jnp.where(a.is_zero, b.s, jnp.where(b.is_zero, a.s, base_s))
+    is_zero = (a.is_zero & b.is_zero) | (exact_cancel & ~a.is_zero & ~b.is_zero)
+    is_nar = a.is_nar | b.is_nar
+    return _rebar(s, ell, is_zero & ~is_nar, is_nar, wf)
+
+
+def lns_matmul(x_words, w_words, n: int, *, accum_dtype=jnp.float32):
+    """Matmul with LNS multiplies (exact fixed-point adds) and linear
+    accumulation — the standard LNS-DNN design point.
+
+    x_words: [M, K] takum-LNS words; w_words: [K, N]. Products are formed
+    in ell_bar space (adds), converted once to float, and accumulated in
+    ``accum_dtype``. Returns float [M, N].
+    """
+    xd = takum.decode_lns(x_words, n)
+    wd = takum.decode_lns(w_words, n)
+    wf = frac_width(n)
+    ellx = jnp.where(xd.s == 1, -xd.ell_bar, xd.ell_bar)
+    ellw = jnp.where(wd.s == 1, -wd.ell_bar, wd.ell_bar)
+    # product grid: ell sums [M, K, N] -- demo-scale only
+    ell_p = ellx[:, :, None] + ellw[None, :, :]
+    s_p = xd.s[:, :, None] ^ wd.s[None, :, :]
+    zero_p = xd.is_zero[:, :, None] | wd.is_zero[None, :, :]
+    mag = jnp.exp(ell_p.astype(accum_dtype) * (0.5 / (1 << wf)))
+    prod = jnp.where(zero_p, 0.0, jnp.where(s_p == 1, -mag, mag))
+    return jnp.sum(prod, axis=1)

@@ -1,0 +1,157 @@
+"""Quantisation layer: the takum codec as a first-class tensor format.
+
+``QuantSpec`` describes a wire format (takum linear / takum LNS / posit /
+none), ``QTensor`` is the quantised pytree. Deployment sites:
+
+* weight-only quantised matmuls (serving)          -> kernels/takum_matmul
+* KV-cache compression (decode shapes)             -> serve/kv_cache
+* gradient compression for cross-pod collectives   -> dist/collectives
+* checkpoint compression                           -> checkpoint/
+
+Scaling: takum's dynamic range (sqrt(e)^±255) dwarfs any activation
+distribution, so scaling is not needed for *range*; it is used to centre
+the distribution where takum precision peaks (|value| ~ 1, where the
+regime is shortest and p = n - 5 mantissa bits survive). Scales are
+**powers of two**, applied with ldexp: exact, commuting with the format's
+own exponent, and adding zero rounding error of their own.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posit as posit_mod
+from repro.core import takum as takum_mod
+
+__all__ = ["QuantSpec", "QTensor", "quantize", "dequantize", "fake_quant",
+           "TAKUM16", "TAKUM8", "POSIT16", "POSIT8", "NONE"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    fmt: str = "takum"          # 'takum' | 'takum_lns' | 'posit' | 'none'
+    n: int = 16                 # word width
+    scale: str = "per_tensor"   # 'none' | 'per_tensor' | 'per_channel'
+    axis: int = -1              # channel axis for per_channel
+    rounding: str = "rne"       # 'rne' | 'sr'
+
+    @property
+    def bits(self) -> int:
+        return 32 if self.fmt == "none" else self.n
+
+    @property
+    def compression(self) -> float:
+        return 32.0 / self.bits
+
+
+TAKUM16 = QuantSpec(fmt="takum", n=16)
+TAKUM8 = QuantSpec(fmt="takum", n=8)
+POSIT16 = QuantSpec(fmt="posit", n=16)
+POSIT8 = QuantSpec(fmt="posit", n=8)
+NONE = QuantSpec(fmt="none")
+
+
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """Quantised tensor: words + power-of-two scale exponent."""
+
+    def __init__(self, words, scale_exp, spec: QuantSpec, shape=None):
+        self.words = words
+        self.scale_exp = scale_exp
+        self.spec = spec
+        self.shape = tuple(shape if shape is not None else words.shape)
+
+    def tree_flatten(self):
+        return (self.words, self.scale_exp), (self.spec, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        spec, shape = aux
+        return cls(children[0], children[1], spec, shape)
+
+    @property
+    def nbytes_wire(self) -> int:
+        import numpy as np
+        return int(np.prod(self.shape)) * self.spec.bits // 8
+
+
+def _scale_exponent(x, spec: QuantSpec):
+    """Power-of-two exponent k such that x * 2^k has absmax ~ 1."""
+    if spec.scale == "none":
+        return jnp.zeros((), jnp.int32)
+    if spec.scale == "per_tensor":
+        absmax = jnp.max(jnp.abs(x))
+    else:
+        axes = tuple(i for i in range(x.ndim) if i != (spec.axis % x.ndim))
+        absmax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    absmax = jnp.where(absmax == 0, 1.0, absmax)
+    # floor(log2): exponent field of the f32 representation
+    k = (absmax.view(jnp.int32) >> 23) - 127
+    return (-k).astype(jnp.int32)
+
+
+def _broadcast_exp(scale_exp, x, spec: QuantSpec):
+    if spec.scale == "per_channel":
+        return scale_exp  # already keepdims-shaped
+    return scale_exp
+
+
+def quantize(x, spec: QuantSpec, *, rng: Optional[jax.Array] = None) -> QTensor:
+    x = jnp.asarray(x, jnp.float32)
+    if spec.fmt == "none":
+        return QTensor(x, jnp.zeros((), jnp.int32), spec, x.shape)
+    k = _scale_exponent(x, spec)
+    y = jnp.ldexp(x, _broadcast_exp(k, x, spec))
+    rng_bits = None
+    if spec.rounding == "sr":
+        if rng is None:
+            raise ValueError("sr quantisation needs an rng key")
+        rng_bits = jax.random.bits(rng, y.shape, jnp.uint32)
+    if spec.fmt == "takum":
+        words = takum_mod.float_to_takum(y, spec.n, rounding=spec.rounding,
+                                         rng_bits=rng_bits)
+    elif spec.fmt == "takum_lns":
+        words = takum_mod.float_to_lns_takum(y, spec.n)
+    elif spec.fmt == "posit":
+        words = posit_mod.float_to_posit(y, spec.n)
+    else:
+        raise ValueError(f"unknown format {spec.fmt}")
+    return QTensor(words, k, spec, x.shape)
+
+
+def dequantize(qt: QTensor, dtype=jnp.float32):
+    spec = qt.spec
+    if spec.fmt == "none":
+        return qt.words.astype(dtype)
+    if spec.fmt == "takum":
+        y = takum_mod.takum_to_float(qt.words, spec.n, dtype=dtype)
+    elif spec.fmt == "takum_lns":
+        y = takum_mod.lns_takum_to_float(qt.words, spec.n, dtype=dtype)
+    elif spec.fmt == "posit":
+        y = posit_mod.posit_to_float(qt.words, spec.n, dtype=dtype)
+    else:
+        raise ValueError(f"unknown format {spec.fmt}")
+    return jnp.ldexp(y, -qt.scale_exp).astype(dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(x, spec: QuantSpec):
+    """Quantise-dequantise with a straight-through-estimator gradient.
+    Used for quantisation-aware training and the QAT examples."""
+    return dequantize(quantize(x, spec))
+
+
+def _fq_fwd(x, spec):
+    return fake_quant(x, spec), None
+
+
+def _fq_bwd(spec, res, g):
+    return (g,)  # STE: takum's range never clips in practice
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)

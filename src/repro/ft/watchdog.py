@@ -1,0 +1,85 @@
+"""Fleet health: heartbeats, straggler detection, elastic re-mesh plan.
+
+At 1000+ nodes the failure model is: hosts die (preemption/hardware),
+hosts straggle (thermal/network), and the job must keep a high goodput
+without human intervention. The control loop here is host-local and
+deterministic so it can be driven from tests; the real deployment wires
+``now_fn`` to wall clock and the membership list to the cluster manager.
+
+Recovery policy (used by launch/train.py on real fleets):
+  * missed heartbeats > ``dead_after``      -> mark host dead, trigger
+    elastic re-mesh (checkpoint restore onto the surviving mesh);
+  * step time > ``straggle_factor`` x median -> mark straggler; its data
+    shards fail over to backups (data.pipeline.shard_assignment), and if
+    persistent the host is drained at the next checkpoint boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+__all__ = ["Heartbeat", "Watchdog", "plan_elastic_remesh"]
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    host: int
+    step: int
+    t: float
+    step_time: float
+
+
+class Watchdog:
+    def __init__(self, n_hosts: int, *, dead_after: float = 60.0,
+                 straggle_factor: float = 2.0,
+                 now_fn: Callable[[], float] = time.monotonic):
+        self.n_hosts = n_hosts
+        self.dead_after = dead_after
+        self.straggle_factor = straggle_factor
+        self.now = now_fn
+        self.last: Dict[int, Heartbeat] = {}
+
+    def beat(self, hb: Heartbeat):
+        self.last[hb.host] = hb
+
+    def dead_hosts(self) -> List[int]:
+        now = self.now()
+        out = []
+        for h in range(self.n_hosts):
+            hb = self.last.get(h)
+            if hb is None or now - hb.t > self.dead_after:
+                out.append(h)
+        return out
+
+    def stragglers(self) -> List[int]:
+        times = sorted(hb.step_time for hb in self.last.values())
+        if not times:
+            return []
+        median = times[len(times) // 2]
+        return [h for h, hb in self.last.items()
+                if hb.step_time > self.straggle_factor * median]
+
+    def healthy(self) -> bool:
+        return not self.dead_hosts()
+
+
+def plan_elastic_remesh(n_alive_chips: int, *,
+                        model_axis: int = 16) -> Optional[dict]:
+    """Largest (data, model) mesh fitting the surviving chips, keeping the
+    model axis intact (TP degree is baked into the weight layout; DP/pod
+    degrees are elastic). Returns the plan the restart uses with
+    checkpoint.restore(sharding_fn=...) — arrays are stored unsharded, so
+    any surviving mesh shape can be re-targeted directly.
+    """
+    if n_alive_chips < model_axis:
+        return None
+    data = n_alive_chips // model_axis
+    # prefer powers of two for even batch splits
+    p2 = 1
+    while p2 * 2 <= data:
+        p2 *= 2
+    return {"mesh_shape": (p2, model_axis), "axes": ("data", "model"),
+            "chips": p2 * model_axis,
+            "batch_advice": f"global_batch must divide by {p2}"}

@@ -1,0 +1,132 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle shape normalisation (flatten/pad to tile multiples), backend
+dispatch (interpret=True off-TPU so the kernels validate on CPU), and the
+custom VJP for the quantised matmul (STE on x; weights are frozen wire
+words). The pure-jnp fallback path (``use_kernel=False``) lowers to plain
+XLA ops — used by the dry-run so that full-scale compilation does not
+depend on Mosaic availability for the host platform.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as kref
+from repro.kernels import takum_codec, takum_matmul, quantize as kquant
+
+__all__ = ["takum_decode", "takum_encode", "fake_quant_fused", "quant_matmul",
+           "interpret_default"]
+
+
+def interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2d_for(x, block):
+    """Flatten to 2D [R, C] padded to block multiples; return unpad info."""
+    flat = x.reshape(-1)
+    c = block[1]
+    rows = -(-flat.size // c)
+    rows_pad = -(-rows // block[0]) * block[0]
+    total = rows_pad * c
+    flat = jnp.pad(flat, (0, total - flat.size))
+    return flat.reshape(rows_pad, c), x.shape, x.size
+
+
+def _unpad2d(y, shape, size):
+    return y.reshape(-1)[:size].reshape(shape)
+
+
+def takum_decode(words, n: int, *, use_kernel: bool = True,
+                 block=takum_codec.DEFAULT_BLOCK, dtype=jnp.float32,
+                 interpret: bool | None = None):
+    if not use_kernel:
+        return kref.decode_ref(words, n, dtype=dtype)
+    interpret = interpret_default() if interpret is None else interpret
+    w2, shape, size = _pad2d_for(words, block)
+    y = takum_codec.decode_kernel_call(w2, n, block=block,
+                                       interpret=interpret, dtype=dtype)
+    return _unpad2d(y, shape, size)
+
+
+def takum_encode(x, n: int, *, use_kernel: bool = True,
+                 block=takum_codec.DEFAULT_BLOCK,
+                 interpret: bool | None = None):
+    if not use_kernel:
+        return kref.encode_ref(x, n)
+    interpret = interpret_default() if interpret is None else interpret
+    x2, shape, size = _pad2d_for(jnp.asarray(x, jnp.float32), block)
+    y = takum_codec.encode_kernel_call(x2, n, block=block,
+                                       interpret=interpret)
+    return _unpad2d(y, shape, size)
+
+
+def fake_quant_fused(x, n: int, *, use_kernel: bool = True,
+                     block=kquant.DEFAULT_BLOCK, dtype=jnp.float32,
+                     interpret: bool | None = None):
+    if not use_kernel:
+        return kref.fake_quant_ref(x, n, dtype=dtype)
+    interpret = interpret_default() if interpret is None else interpret
+    x2, shape, size = _pad2d_for(jnp.asarray(x, jnp.float32), block)
+    y = kquant.fake_quant_kernel_call(x2, n, block=block,
+                                      interpret=interpret, dtype=dtype)
+    return _unpad2d(y, shape, size)
+
+
+def _pad_to(x, m0, m1):
+    p0 = -x.shape[0] % m0
+    p1 = -x.shape[1] % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def quant_matmul(x, w_words, n: int, use_kernel: bool = True,
+                 interpret: bool | None = None):
+    """x [..., K] @ decode(w_words [K, N]) -> [..., N] f32.
+
+    Differentiable in x (weights are wire-format constants). The backward
+    pass decodes once and uses a plain matmul — serving never needs it,
+    QAT examples do.
+    """
+    return _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret)
+
+
+def _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret):
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    if not use_kernel:
+        out = kref.qmatmul_ref(x2, w_words, n)
+        return out.reshape(*lead, w_words.shape[-1])
+    interpret_ = interpret_default() if interpret is None else interpret
+    bm, bn, bk = (takum_matmul.DEFAULT_BM, takum_matmul.DEFAULT_BN,
+                  takum_matmul.DEFAULT_BK)
+    m0, k0 = x2.shape
+    n0 = w_words.shape[-1]
+    xp = _pad_to(x2, bm, bk)
+    wp = _pad_to(w_words, bk, bn)  # zero words decode to 0.0: exact padding
+    out = takum_matmul.qmatmul_kernel_call(xp, wp, n, bm=bm, bn=bn, bk=bk,
+                                           interpret=interpret_)
+    return out[:m0, :n0].reshape(*lead, n0)
+
+
+def _qmm_fwd(x, w_words, n, use_kernel, interpret):
+    return _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret), (
+        x, w_words)
+
+
+def _qmm_bwd(n, use_kernel, interpret, res, g):
+    x, w_words = res
+    w = kref.decode_ref(w_words, n)
+    gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
+    return gx, None
+
+
+quant_matmul.defvjp(_qmm_fwd, _qmm_bwd)

@@ -1,0 +1,41 @@
+"""Fused fake-quantisation Pallas kernel (encode + decode in one VMEM pass).
+
+Used by quantisation-aware training: the round trip through the takum
+grid happens tile-by-tile without materialising the word tensor in HBM —
+one HBM read + one HBM write instead of three.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import takum
+
+__all__ = ["fake_quant_kernel_call"]
+
+DEFAULT_BLOCK = (256, 128)
+
+
+def _fake_quant_tile(x_ref, out_ref, *, n: int, dtype):
+    x = x_ref[...]
+    words = takum.float_to_takum(x, n)
+    out_ref[...] = takum.takum_to_float(words, n, dtype=dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block", "interpret", "dtype"))
+def fake_quant_kernel_call(x, n: int, *, block=DEFAULT_BLOCK,
+                           interpret: bool = False, dtype=jnp.float32):
+    r, c = x.shape
+    grid = (r // block[0], c // block[1])
+    return pl.pallas_call(
+        functools.partial(_fake_quant_tile, n=n, dtype=dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec(block, lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec(block, lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), dtype),
+        interpret=interpret,
+    )(x)

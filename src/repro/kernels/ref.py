@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel in ``takum_codec.py`` / ``quantize.py`` / ``takum_matmul.py``
+must match its oracle here bit-exactly (codec) or to accumulation
+tolerance (matmul) across the shape/dtype sweeps in
+``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import takum
+
+__all__ = ["decode_ref", "encode_ref", "fake_quant_ref", "qmatmul_ref"]
+
+
+def decode_ref(words, n: int, dtype=jnp.float32):
+    """takum words -> float."""
+    return takum.takum_to_float(words, n, dtype=dtype)
+
+
+def encode_ref(x, n: int):
+    """float32 -> takum words (RNE, saturating)."""
+    return takum.float_to_takum(x, n)
+
+
+def fake_quant_ref(x, n: int, dtype=jnp.float32):
+    """fused quantise-dequantise (no scaling; scaling lives a level up)."""
+    return takum.takum_to_float(takum.float_to_takum(x, n), n, dtype=dtype)
+
+
+def qmatmul_ref(x, w_words, n: int, out_dtype=jnp.float32):
+    """x [M, K] float  @  decode(w_words [K, N])  -> [M, N] float.
+
+    The weight-only-quantised matmul: weights live in HBM as takum words
+    and are decoded on the way into the MXU.
+    """
+    w = takum.takum_to_float(w_words, n, dtype=jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)

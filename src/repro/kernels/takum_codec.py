@@ -1,0 +1,74 @@
+"""Pallas TPU kernels for the batched takum codec.
+
+TPU adaptation of the paper's combinational codec: words are processed as
+VMEM tiles on the VPU; the whole decode/encode dataflow is branch-free
+select/shift/add vector code, so a tile is one straight-line pass.
+
+Tiling: tiles of (block_rows, 128) words — 128 lanes is the VPU lane
+count; block_rows is sized so that a tile of words + a tile of floats fits
+comfortably in VMEM (a (256, 128) f32 tile is 128 KiB; words at uint16 are
+64 KiB; both far under the ~16 MiB/core VMEM budget, leaving room for
+double buffering).
+
+The takum advantage ported from the paper: all header math happens in a
+fixed 12-bit window independent of n, so the kernel's op count is
+constant in n — unlike a posit kernel whose CLZ/shift chains widen with n
+(see benchmarks/fig2_decoder_area.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import takum
+from repro.core.bitops import word_dtype
+
+__all__ = ["decode_kernel_call", "encode_kernel_call", "DEFAULT_BLOCK"]
+
+DEFAULT_BLOCK = (256, 128)
+
+
+def _decode_tile(words_ref, out_ref, *, n: int, dtype):
+    w = words_ref[...]
+    out_ref[...] = takum.takum_to_float(w, n, dtype=dtype)
+
+
+def _encode_tile(x_ref, out_ref, *, n: int):
+    x = x_ref[...]
+    out_ref[...] = takum.float_to_takum(x, n)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block", "interpret", "dtype"))
+def decode_kernel_call(words, n: int, *, block=DEFAULT_BLOCK,
+                       interpret: bool = False, dtype=jnp.float32):
+    """words [R, C] (R % block[0] == 0, C % block[1] == 0) -> float [R, C]."""
+    r, c = words.shape
+    grid = (r // block[0], c // block[1])
+    return pl.pallas_call(
+        functools.partial(_decode_tile, n=n, dtype=dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec(block, lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec(block, lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), dtype),
+        interpret=interpret,
+    )(words)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block", "interpret"))
+def encode_kernel_call(x, n: int, *, block=DEFAULT_BLOCK,
+                       interpret: bool = False):
+    """float32 [R, C] -> takum words [R, C]."""
+    r, c = x.shape
+    grid = (r // block[0], c // block[1])
+    return pl.pallas_call(
+        functools.partial(_encode_tile, n=n),
+        grid=grid,
+        in_specs=[pl.BlockSpec(block, lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec(block, lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), word_dtype(n)),
+        interpret=interpret,
+    )(x)

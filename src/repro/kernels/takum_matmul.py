@@ -1,0 +1,68 @@
+"""Weight-only-quantised matmul Pallas kernel: takum decode feeding the MXU.
+
+This is the paper's codec in its natural habitat — the input stage of an
+arithmetic unit. Weights are stored in HBM as takum8/takum16 words
+(2-4x less HBM traffic than f32/bf16); each (bk, bn) weight tile is
+decoded to f32 *in VMEM* and immediately consumed by the MXU matmul.
+
+Memory-roofline effect (serving decode shapes are weight-bandwidth-bound):
+HBM bytes per weight drop from 4 (f32) / 2 (bf16) to n/8, while the MXU
+work is unchanged — the decode is VPU-side and overlaps the MXU under the
+usual Mosaic pipelining.
+
+Grid: (M/bm, N/bn, K/bk) with K innermost; the f32 output tile is
+initialised at k == 0 and accumulated across K steps (standard
+multiple-visit accumulation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import takum
+
+__all__ = ["qmatmul_kernel_call"]
+
+DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 128, 128, 128
+
+
+def _qmm_tile(x_ref, w_ref, o_ref, *, n: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = takum.takum_to_float(w_ref[...], n, dtype=jnp.float32)
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w,
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "bm", "bn", "bk", "interpret"))
+def qmatmul_kernel_call(x, w_words, n: int, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
+                        bk=DEFAULT_BK, interpret: bool = False):
+    """x [M, K] float  @  decode(w_words [K, N])  -> f32 [M, N].
+
+    M % bm == K % bk == N % bn == 0 (ops.py pads; zero words decode to 0.0,
+    so K/N padding is exact).
+    """
+    m, k = x.shape
+    k2, nn = w_words.shape
+    assert k == k2
+    grid = (m // bm, nn // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_qmm_tile, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, nn), jnp.float32),
+        interpret=interpret,
+    )(x, w_words)

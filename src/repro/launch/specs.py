@@ -1,0 +1,69 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these. ``dummy_batch`` materialises small real arrays for smoke
+tests and examples. Modality frontends are stubs (DESIGN.md §5): the
+specs provide *precomputed* frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["input_specs", "dummy_batch", "media_shape", "AUDIO_SUBSAMPLE"]
+
+AUDIO_SUBSAMPLE = 4  # frontend stub: one frame embedding per 4 text positions
+
+
+def media_shape(cfg: ModelConfig, shape: ShapeConfig):
+    if cfg.frontend == "vision":
+        return (shape.global_batch, cfg.n_media_tokens,
+                cfg.d_media or cfg.d_model)
+    if cfg.frontend == "audio":
+        return (shape.global_batch, max(shape.seq_len // AUDIO_SUBSAMPLE, 8),
+                cfg.d_model)
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch ShapeDtypeStructs for the given (arch, shape) cell.
+
+    train/prefill: full-length token batch. decode: a single-token step
+    (the KV cache / recurrent state is a separate argument built by
+    ``serve.cache_specs``)."""
+    b, t = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((b, t), i32),
+               "labels": jax.ShapeDtypeStruct((b, t), i32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, t), i32)}
+    else:  # decode: one new token against a seq_len-deep cache
+        out = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    ms = media_shape(cfg, shape)
+    if ms is not None and shape.kind != "decode":
+        out["media"] = jax.ShapeDtypeStruct(ms, jnp.float32)
+    return out
+
+
+def dummy_batch(cfg: ModelConfig, b: int, t: int, seed: int = 0,
+                kind: str = "train") -> Dict[str, Any]:
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, (b, t + 1), dtype=np.int32)
+    out = {"tokens": jnp.asarray(toks[:, :t])}
+    if kind == "train":
+        out["labels"] = jnp.asarray(toks[:, 1:])
+    if cfg.frontend == "vision":
+        out["media"] = jnp.asarray(rng.normal(size=(
+            b, cfg.n_media_tokens, cfg.d_media or cfg.d_model)),
+            jnp.float32)
+    elif cfg.frontend == "audio":
+        out["media"] = jnp.asarray(rng.normal(size=(
+            b, max(t // AUDIO_SUBSAMPLE, 8), cfg.d_model)), jnp.float32)
+    return out

@@ -1,0 +1,352 @@
+"""Shared transformer building blocks (functional, explicit param pytrees).
+
+All layers are pure functions ``apply(params, x, ...)`` with matching
+``init(key, ...)``; blocks are stackable along a leading layer dim for
+``lax.scan`` (compile-time friendly for 96-layer configs on the 512-way
+dry-run).
+
+Weight-quantised execution: when a ``QuantConfig.weights`` format is
+active (serving), dense projections route through the takum
+decode-matmul (kernels/ops.quant_matmul) — the paper's codec as the input
+stage of the matmul unit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import annotate
+
+DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def dense_init(key, d_in, d_out, scale: Optional[float] = None,
+               dtype=jnp.float32):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def rmsnorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(dt)
+
+
+def rope(x, positions, base: float = 10_000.0):
+    """x: [..., T, H, hd]; positions: [..., T]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(base) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., T, half]
+    ang = ang[..., None, :]                                    # [..., T, 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window, optional cross-attention, cache)
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, d_model, n_heads, n_kv_heads, head_dim,
+              dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d_model, n_heads * head_dim, dtype=dtype),
+        "wk": dense_init(k2, d_model, n_kv_heads * head_dim, dtype=dtype),
+        "wv": dense_init(k3, d_model, n_kv_heads * head_dim, dtype=dtype),
+        "wo": dense_init(k4, n_heads * head_dim, d_model,
+                         scale=(1.0 / (n_heads * head_dim)) ** 0.5,
+                         dtype=dtype),
+    }
+
+
+class KVChunk(NamedTuple):
+    k: jnp.ndarray  # [B, T, Hkv, hd]
+    v: jnp.ndarray
+
+
+def _proj_qkv(params, x, xa, n_heads, n_kv_heads, head_dim, rope_base,
+              positions, use_rope=True):
+    b = x.shape[0]
+    q = (x @ params["wq"]).reshape(b, -1, n_heads, head_dim)
+    src = x if xa is None else xa
+    k = (src @ params["wk"]).reshape(b, -1, n_kv_heads, head_dim)
+    v = (src @ params["wv"]).reshape(b, -1, n_kv_heads, head_dim)
+    if use_rope and xa is None:
+        q = rope(q, positions, rope_base)
+        k = rope(k, positions, rope_base)
+    q = annotate(q, "batch", "seq", "heads", None)
+    k = annotate(k, "batch", "seq", "kv_heads", None)
+    v = annotate(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask):
+    """q [B,Tq,H,hd], k/v [B,Tk,Hkv,hd]; GQA via head grouping; f32 softmax."""
+    b, tq, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, tq, hkv, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+    scores = scores / (hd ** 0.5)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, tq, h, hd)
+
+
+# chunked (memory-efficient / flash-style) attention ------------------------
+
+ATTN_CHUNK_T = 2048   # switch to the chunked path at/above this seq length
+QC, KC = 2048, 1024   # query/key chunk sizes (large QC: fewer KV re-reads)
+
+# beyond-paper perf knob (EXPERIMENTS.md §Perf): skip fully-masked KV
+# blocks in the causal band. Baseline = off.
+import os as _os
+CAUSAL_SKIP = _os.environ.get("REPRO_CAUSAL_SKIP", "0") == "1"
+
+
+def _sdpa_chunked(q, k, v, *, window: int = 0, causal_skip: bool = False,
+                  causal: bool = True):
+    """Online-softmax attention: never materialises [Tq, Tk] scores.
+
+    Memory per step is [B, Hkv, G, QC, KC]; the outer loop over query
+    blocks is a python loop (static), the inner loop over KV blocks a
+    ``lax.scan``. With ``causal_skip`` the inner loop only visits KV
+    blocks that intersect the causal/window band — the beyond-paper
+    useful-FLOPs optimisation recorded in EXPERIMENTS.md §Perf.
+    """
+    b, tq, h, hd = q.shape
+    tk = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    assert tq % QC == 0 and tk % KC == 0, (tq, tk)
+    q5 = q.reshape(b, tq, hkv, g, hd)
+    scale = hd ** -0.5
+    nkb = tk // KC
+    k_blocks = k.reshape(b, nkb, KC, hkv, hd).swapaxes(0, 1)
+    v_blocks = v.reshape(b, nkb, KC, hkv, hd).swapaxes(0, 1)
+    kidx = (jnp.arange(nkb) * KC)
+
+    outs = []
+    for qb in range(tq // QC):
+        q_blk = q5[:, qb * QC:(qb + 1) * QC]            # [B,QC,hkv,g,hd]
+        qpos = qb * QC + jnp.arange(QC)
+        lo, hi = 0, nkb
+        if causal_skip and causal:
+            hi = min(nkb, qb + QC // KC + 1)             # blocks above diag
+            if window:
+                lo = max(0, (qb * QC - window) // KC)
+
+        def kv_step(carry, inp, qpos=qpos, q_blk=q_blk):
+            m, l, acc = carry
+            kc_, vc_, k0 = inp
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, kc_)
+            s = s.astype(jnp.float32) * scale
+            kpos = k0 + jnp.arange(KC)
+            if causal:
+                msk = kpos[None, :] <= qpos[:, None]
+                if window:
+                    msk = msk & (kpos[None, :] > qpos[:, None] - window)
+                s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vc_.dtype), vc_)
+            acc = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l, acc), None
+
+        init = (jnp.full((b, hkv, g, QC), -jnp.inf, jnp.float32),
+                jnp.zeros((b, hkv, g, QC), jnp.float32),
+                jnp.zeros((b, hkv, g, QC, hd), v.dtype))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (k_blocks[lo:hi], v_blocks[lo:hi], kidx[lo:hi]))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        outs.append(out.transpose(0, 3, 1, 2, 4).reshape(b, QC, h, hd))
+    return jnp.concatenate(outs, axis=1)
+
+
+def causal_mask(tq, tk, offset=0, window=0):
+    """[1,1,1,tq,tk] True = attend. offset: query position of row 0."""
+    qi = jnp.arange(tq)[:, None] + offset
+    kj = jnp.arange(tk)[None, :]
+    m = kj <= qi
+    if window:
+        m = m & (kj > qi - window)
+    return m[None, None, None, :, :]
+
+
+def attention(params, x, cfg, positions, *, xa=None, mask=None,
+              cache: Optional[Dict[str, Any]] = None, window: int = 0,
+              bidirectional: bool = False, prefill_fresh: bool = False):
+    """Self- or cross-attention with optional decode cache.
+
+    cache (self-attn decode): {"k","v": [B, Tmax, Hkv, hd], "pos": scalar}.
+    Returns (out, new_cache).
+    """
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k, v = _proj_qkv(params, x, xa, h, hkv, hd, cfg.rope_base, positions,
+                        use_rope=xa is None)
+    new_cache = None
+    if (cache is not None and xa is None and prefill_fresh
+            and "start" not in cache
+            and x.shape[1] >= ATTN_CHUNK_T and x.shape[1] % QC == 0):
+        # fresh prefill (pos == 0): fill the cache, but compute attention
+        # with the chunked kernel over the *current* k/v — the cache-read
+        # path would materialise [Tq, Tk] scores (tens of GB at 32k)
+        pos = cache["pos"]
+        if cfg.kv_quant != "none":
+            from repro.core import takum as takum_mod
+            nbits = int(cfg.kv_quant.replace("takum", ""))
+            kw = takum_mod.float_to_takum(k.astype(jnp.float32), nbits)
+            vw = takum_mod.float_to_takum(v.astype(jnp.float32), nbits)
+        else:
+            kw = k.astype(cache["k"].dtype)
+            vw = v.astype(cache["v"].dtype)
+        ck = jax.lax.dynamic_update_slice(cache["k"], kw, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vw, (0, pos, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": pos + x.shape[1]}
+        out = _sdpa_chunked(q, k, v, window=window, causal_skip=CAUSAL_SKIP,
+                            causal=True)
+        out = out.reshape(x.shape[0], x.shape[1], h * hd)
+        out = out @ params["wo"]
+        return annotate(out, "batch", "seq", "embed"), new_cache
+    if cache is not None and xa is None:
+        pos = cache["pos"]
+        if cfg.kv_quant != "none":
+            # takum-compressed KV cache: encode on append, decode on read.
+            # The words live in HBM at n/32 of the f32 footprint — this is
+            # the paper's codec as the KV-cache wire format (DESIGN.md §3).
+            from repro.core import takum as takum_mod
+            nbits = int(cfg.kv_quant.replace("takum", ""))
+            kw = takum_mod.float_to_takum(k.astype(jnp.float32), nbits)
+            vw = takum_mod.float_to_takum(v.astype(jnp.float32), nbits)
+            ck = jax.lax.dynamic_update_slice(cache["k"], kw, (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vw, (0, pos, 0, 0))
+            new_cache = {"k": ck, "v": cv, "pos": pos + x.shape[1]}
+            ck = takum_mod.takum_to_float(ck, nbits).astype(k.dtype)
+            cv = takum_mod.takum_to_float(cv, nbits).astype(v.dtype)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            new_cache = {"k": ck, "v": cv, "pos": pos + x.shape[1]}
+        tk = ck.shape[1]
+        kj = jnp.arange(tk)[None, None, None, None, :]
+        qi = (pos + jnp.arange(x.shape[1]))[None, None, None, :, None]
+        m = kj <= qi
+        if window:
+            m = m & (kj > qi - window)
+        if "start" in cache:
+            # left-padded prompts: positions before start[b] are padding
+            m = m & (kj >= cache["start"][:, None, None, None, None])
+            new_cache["start"] = cache["start"]
+        k, v, mask = ck.astype(k.dtype), cv.astype(v.dtype), m
+    if (cache is None and xa is None and x.shape[1] >= ATTN_CHUNK_T
+            and x.shape[1] % QC == 0 and k.shape[1] % KC == 0):
+        out = _sdpa_chunked(q, k, v, window=window,
+                            causal_skip=CAUSAL_SKIP,
+                            causal=not bidirectional)
+    else:
+        out = _sdpa(q, k, v, mask)
+    out = out.reshape(x.shape[0], x.shape[1], h * hd)
+    out = x_out = out @ params["wo"]
+    return annotate(x_out, "batch", "seq", "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model, d_ff, activation, dtype=jnp.float32):
+    if activation == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"wg": dense_init(k1, d_model, d_ff, dtype=dtype),
+                "w1": dense_init(k2, d_model, d_ff, dtype=dtype),
+                "w2": dense_init(k3, d_ff, d_model, dtype=dtype)}
+    k1, k2 = jax.random.split(key)
+    return {"w1": dense_init(k1, d_model, d_ff, dtype=dtype),
+            "w2": dense_init(k2, d_ff, d_model, dtype=dtype)}
+
+
+def mlp(params, x, activation):
+    if activation == "swiglu":
+        hid = jax.nn.silu(x @ params["wg"]) * (x @ params["w1"])
+    elif activation == "relu2":
+        hid = jax.nn.relu(x @ params["w1"]) ** 2
+    elif activation == "gelu":
+        hid = jax.nn.gelu(x @ params["w1"])
+    else:
+        raise ValueError(activation)
+    hid = annotate(hid, "batch", "seq", "ff")
+    out = hid @ params["w2"]
+    return annotate(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+VOCAB_PAD = 128  # embedding tables padded so the vocab dim shards cleanly
+
+
+def padded_vocab(vocab: int) -> int:
+    return -(-vocab // VOCAB_PAD) * VOCAB_PAD
+
+
+def embed_init(key, vocab, d_model, tie: bool, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    vp = padded_vocab(vocab)
+    p = {"embed_tokens": jax.random.normal(k1, (vp, d_model), dtype) * 0.02}
+    if not tie:
+        p["unembed"] = dense_init(k2, d_model, vp, dtype=dtype)
+    return p
+
+
+def embed(params, tokens, dtype):
+    out = params["embed_tokens"][tokens].astype(dtype)
+    return annotate(out, "batch", "seq", "embed")
+
+
+def unembed(params, x, vocab: Optional[int] = None):
+    if "unembed" in params:
+        logits = x @ params["unembed"]
+    else:
+        logits = x @ params["embed_tokens"].T.astype(x.dtype)
+    logits = annotate(logits.astype(jnp.float32), "batch", "seq", "vocab")
+    if vocab is not None and logits.shape[-1] != vocab:
+        logits = logits[..., :vocab]  # drop the vocab padding
+    return logits
+
+
+def xent_loss(logits, labels, mask=None):
+    """Mean token cross-entropy in f32; labels [B, T] int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

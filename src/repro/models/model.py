@@ -1,0 +1,138 @@
+"""Unified model API dispatching on the config family.
+
+    init(key, cfg)                                   -> params
+    forward(params, batch, cfg, remat)               -> (logits, aux)
+    loss_fn(params, batch, cfg, remat)               -> (loss, metrics)
+    init_cache(cfg, batch, max_len)                  -> cache
+    prefill(params, tokens, cfg, cache, media=None)  -> (logits, cache)
+    decode_step(params, tokens, cfg, cache, pos)     -> (logits, cache)
+
+``batch`` is a dict: {"tokens": [B,T] int32, "labels": [B,T] int32,
+optionally "media": [B, M, D_media] for the vlm/audio frontend stubs}.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+from repro.models import layers as L
+
+AUX_WEIGHT = 0.01
+
+
+def _mod(cfg: ModelConfig):
+    return encdec if cfg.family == "encdec" else transformer
+
+
+def init(key, cfg: ModelConfig):
+    return _mod(cfg).init(key, cfg)
+
+
+def forward(params, batch: Dict[str, Any], cfg: ModelConfig, *,
+            remat: bool = False):
+    return _mod(cfg).forward(params, batch["tokens"], cfg,
+                             media=batch.get("media"), remat=remat)
+
+
+CHUNK_XENT_T = 2048   # chunk the unembed+xent at/above this seq length
+XENT_CHUNK = 1024
+
+
+def _chunked_xent(params, feats, labels, mask, cfg: ModelConfig):
+    """Per-chunk unembed + cross entropy under jax.checkpoint: the [*, V]
+    logits tensor only ever exists one sequence chunk at a time (forward
+    AND backward) — essential at 100k-256k vocab."""
+    b, t, d = feats.shape
+    ch = XENT_CHUNK
+    assert t % ch == 0
+    nb = t // ch
+    up = {k: params[k] for k in ("unembed", "embed_tokens") if k in params}
+
+    def chunk(fc, lc, mc):
+        upc = jax.tree_util.tree_map(lambda p: p.astype(fc.dtype), up)
+        logits = L.unembed(upc, fc, vocab=cfg.vocab)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return jnp.sum(nll), jnp.sum(mc)
+
+    chunk = jax.checkpoint(chunk,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, inp):
+        s, c = carry
+        fc, lc, mc = inp
+        ds, dc = chunk(fc, lc, mc)
+        return (s + ds, c + dc), None
+
+    fs = feats.reshape(b, nb, ch, d).swapaxes(0, 1)
+    ls = labels.reshape(b, nb, ch).swapaxes(0, 1)
+    ms = (jnp.ones((b, t), jnp.float32) if mask is None
+          else mask.astype(jnp.float32)).reshape(b, nb, ch).swapaxes(0, 1)
+    (s, c), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                             (fs, ls, ms))
+    return s / jnp.maximum(c, 1.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = False):
+    t = batch["tokens"].shape[1]
+    if t >= CHUNK_XENT_T and t % XENT_CHUNK == 0:
+        feats, aux = _mod(cfg).forward(params, batch["tokens"], cfg,
+                                       media=batch.get("media"),
+                                       remat=remat, features=True)
+        xent = _chunked_xent(params, feats, batch["labels"],
+                             batch.get("loss_mask"), cfg)
+    else:
+        logits, aux = forward(params, batch, cfg, remat=remat)
+        xent = L.xent_loss(logits, batch["labels"], batch.get("loss_mask"))
+    loss = xent + AUX_WEIGHT * aux
+    return loss, {"loss": loss, "xent": xent, "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
+               enc_len: Optional[int] = None, start=None):
+    if cfg.family == "encdec":
+        d = transformer.DTYPES[cfg.dtype] if dtype is None else dtype
+        enc_len = enc_len or max(max_len // 4, 8)
+        return {"dec": encdec.init_cache(cfg, batch, max_len, dtype),
+                "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), d)}
+    return transformer.init_cache(cfg, batch, max_len, dtype, start=start)
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache, *, media=None):
+    """Run the prompt through the model, filling the cache.
+    Returns (last-position logits [B, V], cache)."""
+    if cfg.family == "encdec":
+        enc_out = encdec.encode(params, media, cfg)
+        feats, dec_cache = encdec.decode(params, tokens, enc_out, cfg,
+                                         caches=cache["dec"], pos=0,
+                                         features=True)
+        logits = L.unembed(
+            transformer.cast_params(
+                {k: params[k] for k in ("unembed", "embed_tokens")
+                 if k in params}, feats.dtype),
+            feats[:, -1:], vocab=cfg.vocab)
+        return logits[:, -1], {"dec": dec_cache, "enc_out": enc_out}
+    logits, cache = transformer.forward_cached(params, tokens, cfg, cache,
+                                               pos=0, media=media,
+                                               last_only=True)
+    return logits[:, -1], cache
+
+
+def decode_step(params, tokens, cfg: ModelConfig, cache, *, pos,
+                media=None):
+    """One token step: tokens [B, 1] at position ``pos`` (int array ok).
+    Returns (logits [B, V], cache)."""
+    if cfg.family == "encdec":
+        logits, dec_cache = encdec.decode(params, tokens, cache["enc_out"],
+                                          cfg, caches=cache["dec"], pos=pos)
+        return logits[:, -1], {"dec": dec_cache, "enc_out": cache["enc_out"]}
+    logits, cache = transformer.forward_cached(params, tokens, cfg, cache,
+                                               pos=pos, media=media)
+    return logits[:, -1], cache

@@ -1,0 +1,121 @@
+"""Token-choice top-k MoE with sort-based static-capacity dispatch.
+
+Scales to the 384-expert kimi-k2 config without materialising any
+[tokens, experts] tensor: assignments are sorted by expert id, positions
+within each expert bucket come from a searchsorted over the sorted ids,
+and tokens are scattered into a static [E, C, D] buffer (capacity drop
+semantics). The grouped FFN is a single einsum over the expert dim —
+flop-honest and EP-shardable (E on the "model" mesh axis, capacity rows
+on "data"; GSPMD materialises the dispatch all-to-all from the
+gather/scatter).
+
+Aux loss: Switch-style load-balance term, returned to the train loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import annotate
+from repro.models.layers import dense_init
+
+__all__ = ["moe_init", "moe_apply", "moe_capacity"]
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    c = int(n_tokens * top_k / n_experts * capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_init(key, d_model, d_ff, n_experts, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale_in = (1.0 / d_model) ** 0.5
+    scale_out = (1.0 / d_ff) ** 0.5
+    return {
+        "router": dense_init(k1, d_model, n_experts, dtype=jnp.float32),
+        "experts_wg": jax.random.normal(k2, (n_experts, d_model, d_ff),
+                                        dtype) * scale_in,
+        "experts_w1": jax.random.normal(k3, (n_experts, d_model, d_ff),
+                                        dtype) * scale_in,
+        "experts_w2": jax.random.normal(k4, (n_experts, d_ff, d_model),
+                                        dtype) * scale_out,
+    }
+
+
+def moe_apply(params, x, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25):
+    """x [B, T, D] -> (out [B, T, D], aux_loss scalar).
+
+    **Grouped dispatch**: tokens route within their own group — one group
+    per sequence for train/prefill (so the sort/scatter chain never
+    crosses data shards; GSPMD keeps it shard-local under the batch
+    sharding), and a single whole-batch group for decode (T == 1, where
+    per-sequence buffers would waste E x compute). This mirrors the
+    production pattern (local routing + expert-sharded grouped GEMM).
+    """
+    b, t, d = x.shape
+    if t == 1:
+        g, s = 1, b          # decode: one global group of B tokens
+    else:
+        g, s = b, t          # train/prefill: per-sequence groups
+    xt = x.reshape(g, s, d)
+    xt = annotate(xt, "batch" if g > 1 else None, None, None)
+    c = moe_capacity(s, n_experts, top_k, capacity_factor)
+
+    logits = jnp.einsum("gsd,de->gse", xt,
+                        params["router"].astype(x.dtype)).astype(jnp.float32)
+    gate_vals, idx = jax.lax.top_k(logits, top_k)          # [G, S, k]
+    gates = jax.nn.softmax(gate_vals, axis=-1)
+
+    # load-balance aux (Switch): E * mean_e fraction_e * prob_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jax.nn.one_hot(idx[..., 0], n_experts, dtype=jnp.float32)
+    aux = n_experts * jnp.sum(jnp.mean(top1, axis=(0, 1)) *
+                              jnp.mean(probs, axis=(0, 1)))
+
+    def dispatch(xg, idxg, gatesg):
+        """One group: [S,D],[S,k],[S,k] -> buffers + combine metadata."""
+        flat_e = idxg.reshape(-1).astype(jnp.int32)        # [S*k]
+        flat_tok = jnp.repeat(jnp.arange(s, dtype=jnp.int32), top_k)
+        order = jnp.argsort(flat_e)
+        se = flat_e[order]
+        stok = flat_tok[order]
+        sgate = gatesg.reshape(-1)[order]
+        starts = jnp.searchsorted(se, jnp.arange(n_experts,
+                                                 dtype=jnp.int32))
+        pos = jnp.arange(s * top_k, dtype=jnp.int32) - starts[se]
+        keep = pos < c
+        # dropped assignments scatter out-of-bounds (mode="drop"): no
+        # overflow row, so E*c stays cleanly shardable
+        dest = jnp.where(keep, se * c + pos, n_experts * c)
+        buf = jnp.zeros((n_experts * c, d), x.dtype)
+        buf = buf.at[dest].set(xg[stok], mode="drop")
+        return buf.reshape(n_experts, c, d), (stok, sgate, keep, dest)
+
+    buf, meta = jax.vmap(dispatch)(xt, idx, gates)         # [G,E,C,D]
+    buf = annotate(buf, "batch" if g > 1 else None, "experts", None, None)
+
+    # ---- grouped SwiGLU FFN (expert dim sharded over "model") -----------
+    wg, w1, w2 = (params["experts_wg"].astype(x.dtype),
+                  params["experts_w1"].astype(x.dtype),
+                  params["experts_w2"].astype(x.dtype))
+    hid = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, wg)) * \
+        jnp.einsum("gecd,edf->gecf", buf, w1)
+    hid = annotate(hid, "batch" if g > 1 else None, "experts", None, "ff")
+    out_buf = jnp.einsum("gecf,efd->gecd", hid, w2)
+    out_buf = annotate(out_buf, "batch" if g > 1 else None, "experts",
+                       None, None)
+
+    def combine(out_g, m):
+        stok, sgate, keep, dest = m
+        flat = out_g.reshape(n_experts * c, d)
+        y = jnp.where(keep[:, None],
+                      flat[jnp.minimum(dest, n_experts * c - 1)], 0.0)
+        y = y * sgate[:, None].astype(x.dtype)
+        return jnp.zeros((s, d), x.dtype).at[stok].add(y)
+
+    out = jax.vmap(combine)(out_buf, meta)                 # [G,S,D]
+    out = annotate(out, "batch" if g > 1 else None, None, None)
+    return out.reshape(b, t, d), aux.astype(jnp.float32)

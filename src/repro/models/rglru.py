@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin), associative-scan form.
+
+Recurrence (per channel):  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with  a_t = exp(c * softplus(Lambda) * (-sigmoid(W_a x_t)))  (c = 8),
+input gate i_t = sigmoid(W_x x_t).
+
+Training/prefill uses ``jax.lax.associative_scan`` over the sequence
+(log-depth, sub-quadratic — this is why recurrentgemma runs the
+``long_500k`` shape); decode carries ``h`` plus a 3-deep conv ring buffer.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import annotate
+from repro.models.layers import dense_init
+
+CONV_K = 4
+_C = 8.0
+
+__all__ = ["rglru_block_init", "rglru_block_apply", "rglru_decode_state"]
+
+
+def rglru_block_init(key, d_model, lru_width, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in_x": dense_init(ks[0], d_model, lru_width, dtype=dtype),
+        "w_in_g": dense_init(ks[1], d_model, lru_width, dtype=dtype),
+        "conv": jax.random.normal(ks[2], (CONV_K, lru_width), dtype) * 0.1,
+        "w_a": dense_init(ks[3], lru_width, lru_width, dtype=dtype),
+        "w_x": dense_init(ks[4], lru_width, lru_width, dtype=dtype),
+        # Lambda init so a ~ U(0.9, 0.999) at r = 0.5
+        "lam": jnp.asarray(
+            jax.random.uniform(ks[5], (lru_width,), jnp.float32,
+                               minval=2.0, maxval=6.0)),
+        "w_out": dense_init(ks[6], lru_width, d_model, dtype=dtype),
+    }
+
+
+def _conv1d_causal(x, kernel, state: Optional[jnp.ndarray]):
+    """Depthwise causal conv, kernel [K, C]; state [B, K-1, C] for decode."""
+    b, t, c = x.shape
+    if state is None:
+        pad = jnp.zeros((b, CONV_K - 1, c), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + t, :] * kernel[i] for i in range(CONV_K))
+    new_state = xp[:, -(CONV_K - 1):, :]
+    return out, new_state
+
+
+def _rglru_scan(a, bx):
+    """Associative scan of h_t = a_t h_{t-1} + bx_t along axis 1."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return hh
+
+
+def rglru_decode_state(batch, lru_width, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, lru_width), dtype),
+    }
+
+
+def rglru_block_apply(params, x, *, state: Optional[Dict] = None):
+    """x [B, T, D] -> (out [B, T, D], new_state)."""
+    gate = jax.nn.gelu(x @ params["w_in_g"])
+    u = x @ params["w_in_x"]
+    u, conv_state = _conv1d_causal(
+        u, params["conv"], None if state is None else state["conv"])
+    u = annotate(u, "batch", "seq", "state")
+
+    r = jax.nn.sigmoid((u @ params["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ params["w_x"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r       # [B, T, C] f32
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably in log space
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = mult * i * u.astype(jnp.float32)
+
+    if state is None:
+        h = _rglru_scan(a, bx)
+        new_state = None
+    else:
+        h0 = state["h"]
+        # teach the scan about h0 by folding it into the first step
+        bx0 = bx.at[:, 0, :].add(a[:, 0, :] * h0)
+        h = _rglru_scan(a, bx0)
+        new_state = {"h": h[:, -1, :], "conv": conv_state}
+    h = annotate(h.astype(x.dtype), "batch", "seq", "state")
+    out = (h * gate) @ params["w_out"]
+    return annotate(out, "batch", "seq", "embed"), new_state

@@ -1,0 +1,181 @@
+"""RWKV-6 (Finch) blocks: data-dependent decay, chunked sub-quadratic form.
+
+Time-mix recurrence per head (Dk = Dv = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t^T ( diag(prod_{u<=t-1} w) S_0-terms ... ) + r_t^T diag(u) k_t v_t^T
+
+Training/prefill uses a **chunked** evaluation (chunk L): within-chunk
+terms go through an [L, L, Dk] decay tensor whose exponents are all
+non-positive (cl_{t-1} - cl_s for s < t), so the computation is stable by
+construction; across chunks a `lax.scan` carries S. Complexity
+O(T * L * Dk * Dv / head) — sub-quadratic in T, which is why rwkv6 runs
+the ``long_500k`` shape. Decode is the exact recurrence, O(1) per token.
+
+The data-dependent decay (the Finch contribution) is
+``log w_t = -exp(ww + lora(x_shifted))`` — always negative.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import annotate
+from repro.models.layers import dense_init
+
+__all__ = ["rwkv_block_init", "rwkv_time_mix", "rwkv_channel_mix",
+           "rwkv_decode_state", "CHUNK"]
+
+CHUNK = 64
+_LORA_R = 32
+
+
+def rwkv_block_init(key, d_model, d_ff, head_dim, dtype=jnp.float32):
+    h = d_model // head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        "tm": {
+            "mu": jax.random.uniform(ks[0], (5, d_model), jnp.float32),
+            "ww": jnp.asarray(
+                jax.random.uniform(ks[1], (d_model,), jnp.float32,
+                                   minval=-1.0, maxval=1.5)),
+            "w_lora_a": dense_init(ks[2], d_model, _LORA_R, dtype=jnp.float32),
+            "w_lora_b": dense_init(ks[3], _LORA_R, d_model,
+                                   scale=0.01, dtype=jnp.float32),
+            "wr": dense_init(ks[4], d_model, d_model, dtype=dtype),
+            "wk": dense_init(ks[5], d_model, d_model, dtype=dtype),
+            "wv": dense_init(ks[6], d_model, d_model, dtype=dtype),
+            "wg": dense_init(ks[7], d_model, d_model, dtype=dtype),
+            "wo": dense_init(ks[8], d_model, d_model, dtype=dtype),
+            "u": jax.random.normal(ks[9], (h, head_dim), jnp.float32) * 0.3,
+            "gn_scale": jnp.ones((d_model,), jnp.float32),
+        },
+        "cm": {
+            "mu": jax.random.uniform(ks[10], (2, d_model), jnp.float32),
+            "wk": dense_init(ks[11], d_model, d_ff, dtype=dtype),
+            "wv": dense_init(jax.random.fold_in(key, 101), d_ff, d_model,
+                             dtype=dtype),
+            "wr": dense_init(jax.random.fold_in(key, 102), d_model, d_model,
+                             dtype=dtype),
+        },
+    }
+
+
+def rwkv_decode_state(batch, d_model, head_dim, dtype=jnp.float32):
+    h = d_model // head_dim
+    return {
+        "S": jnp.zeros((batch, h, head_dim, head_dim), jnp.float32),
+        "tm_prev": jnp.zeros((batch, d_model), dtype),
+        "cm_prev": jnp.zeros((batch, d_model), dtype),
+    }
+
+
+def _shift(x, prev: Optional[jnp.ndarray]):
+    """x[t-1] with x[-1] = prev (or zeros)."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _heads(x, hd):
+    b, t, d = x.shape
+    return x.reshape(b, t, d // hd, hd)
+
+
+def _group_norm(o, scale, hd, eps=1e-5):
+    b, t, h, d = o.shape
+    mean = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mean) * jax.lax.rsqrt(var + eps)
+    return o.reshape(b, t, h * d) * scale
+
+
+def _wkv_chunk(carry, inp, u):
+    """One chunk: carry S [B,H,Dk,Dv]; inp r,k,v [B,L,H,D], logw [B,L,H,D]."""
+    S = carry
+    r, k, v, logw = inp
+    cl = jnp.cumsum(logw, axis=1)                      # [B,L,H,D], <= 0
+    cl_prev = cl - logw                                # cl_{t-1}
+    r_t = r * jnp.exp(cl_prev)                         # stable: exp(<=0)
+    o_cross = jnp.einsum("blhd,bhdv->blhv", r_t, S)
+    # intra-chunk: D[t,s,d] = exp(cl_{t-1,d} - cl_{s,d}),  s < t
+    expo = cl_prev[:, :, None] - cl[:, None, :, :, :]  # [B,L,L,H,D]
+    tri = jnp.tril(jnp.ones((cl.shape[1], cl.shape[1]), bool), k=-1)
+    decay = jnp.where(tri[None, :, :, None, None], jnp.exp(
+        jnp.minimum(expo, 0.0)), 0.0)
+    att = jnp.einsum("blhd,bshd,blshd->blsh", r, k, decay)
+    diag = jnp.einsum("blhd,hd,blhd->blh", r, u, k)
+    o_intra = jnp.einsum("blsh,bshv->blhv", att, v) + \
+        diag[..., None] * v
+    # state update: S' = diag(exp(cl_L)) S + sum_s diag(exp(cl_L - cl_s)) k v^T
+    k_t = k * jnp.exp(cl[:, -1:] - cl)                 # stable: exp(<=0)
+    S = S * jnp.exp(cl[:, -1])[..., None] + \
+        jnp.einsum("bshd,bshv->bhdv", k_t, v)
+    return S, o_cross + o_intra
+
+
+def rwkv_time_mix(params, x, head_dim, *, state: Optional[Dict] = None,
+                  chunk: int = CHUNK):
+    """x [B, T, D] -> (out, new_state). T % chunk == 0 in chunked mode
+    (callers pad); decode (T == 1) runs the exact recurrence."""
+    p = params["tm"]
+    b, t, d = x.shape
+    hd = head_dim
+    h = d // hd
+    prev = None if state is None else state["tm_prev"]
+    xs = _shift(x, prev)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + (xs - x) * mu[i] for i in range(5))
+    r = _heads(xr @ p["wr"], hd).astype(jnp.float32)
+    k = _heads(xk @ p["wk"], hd).astype(jnp.float32)
+    v = _heads(xv @ p["wv"], hd).astype(jnp.float32)
+    g = xg @ p["wg"]
+    dd = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    logw = -jnp.exp(p["ww"] + dd)                      # [B,T,D] < 0
+    logw = _heads(logw, hd)
+
+    if state is not None and t == 1:
+        S = state["S"]
+        o = jnp.einsum("bhd,bhdv->bhv", r[:, 0], S) + \
+            jnp.einsum("bhd,hd,bhd->bh", r[:, 0], p["u"], k[:, 0])[..., None] \
+            * v[:, 0]
+        S = S * jnp.exp(logw[:, 0])[..., None] + \
+            jnp.einsum("bhd,bhv->bhdv", k[:, 0], v[:, 0])
+        o = o[:, None]                                  # [B,1,H,Dv]
+        new_state = {"S": S, "tm_prev": x[:, -1]}
+    else:
+        assert t % chunk == 0, f"T={t} not a multiple of chunk={chunk}"
+        nch = t // chunk
+
+        def resh(z):
+            return z.reshape(b, nch, chunk, h, hd).swapaxes(0, 1)
+
+        S0 = (jnp.zeros((b, h, hd, hd), jnp.float32) if state is None
+              else state["S"])
+        Sf, o = jax.lax.scan(
+            lambda c, i: _wkv_chunk(c, i, p["u"]),
+            S0, (resh(r), resh(k), resh(v), resh(logw)))
+        o = o.swapaxes(0, 1).reshape(b, t, h, hd)
+        new_state = None if state is None else {"S": Sf, "tm_prev": x[:, -1]}
+
+    o = _group_norm(o.astype(x.dtype), p["gn_scale"].astype(x.dtype), hd)
+    out = (o * jax.nn.silu(g)) @ p["wo"]
+    out = annotate(out, "batch", "seq", "embed")
+    if state is not None and t == 1:
+        return out, new_state
+    return out, new_state
+
+
+def rwkv_channel_mix(params, x, *, state: Optional[Dict] = None):
+    p = params["cm"]
+    prev = None if state is None else state["cm_prev"]
+    xs = _shift(x, prev)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    kk = jax.nn.relu(xk @ p["wk"]) ** 2
+    kk = annotate(kk, "batch", "seq", "ff")
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"])
+    new_state = None if state is None else {"cm_prev": x[:, -1]}
+    return annotate(out, "batch", "seq", "embed"), new_state

@@ -1,0 +1,360 @@
+"""Decoder-only model assembly for the dense / moe / vlm / hybrid / rwkv6
+families. Layers are stacked and scanned (compile-time friendly at 96
+layers x 512 devices); heterogeneous patterns (hybrid 1-attn:2-recurrent,
+vlm cross-attn every 5th layer) scan over homogeneous *super-blocks* with
+any remainder unrolled.
+
+Public surface (used by train/serve/launch):
+    init(key, cfg)                          -> params
+    forward(params, tokens, cfg, ...)       -> (logits, aux_loss)
+    init_cache(cfg, batch, max_len, ...)    -> cache
+    forward_cached(params, tokens, cfg, cache, ...) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import annotate
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg
+from repro.models import rwkv6 as rk
+
+DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def cast_params(params, dtype):
+    """Compute-dtype view of the parameters.
+
+    * float leaves (f32 masters) are cast to the compute dtype;
+    * uint8/uint16 leaves are **takum wire words** (weight-only
+      quantisation, DESIGN.md §3): decoded here, at the consumer — HBM and
+      any FSDP gathers along the way carry n/32 of the f32 bytes. This is
+      the codec-as-matmul-input-stage integration on the XLA path (the
+      Pallas kernel fuses the same decode into the matmul tile loop).
+    """
+    from repro.core import takum as _takum
+
+    def cast(p):
+        if hasattr(p, "dtype"):
+            if p.dtype in (jnp.uint8, jnp.uint16):
+                n = jnp.iinfo(p.dtype).bits
+                return _takum.takum_to_float(p, n, dtype=dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating):
+                return p.astype(dtype)
+        return p
+    return jax.tree_util.tree_map(cast, params)
+
+
+# ---------------------------------------------------------------------------
+# Block init/apply by kind
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ModelConfig, kind: str, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": L.rmsnorm_init(d), "ln2": L.rmsnorm_init(d)}
+    if kind in ("self", "cross"):
+        p["attn"] = L.attn_init(k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                dtype)
+        p["mlp"] = L.mlp_init(k2, d, cfg.d_ff, cfg.activation, dtype)
+    elif kind == "moe":
+        p["attn"] = L.attn_init(k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                dtype)
+        p["moe"] = moe_mod.moe_init(k2, d, cfg.d_ff, cfg.n_experts, dtype)
+    elif kind == "rec":
+        p["rec"] = rg.rglru_block_init(k1, d, cfg.lru_width or d, dtype)
+        p["mlp"] = L.mlp_init(k2, d, cfg.d_ff, cfg.activation, dtype)
+    elif kind == "rwkv":
+        p = {"ln1": L.rmsnorm_init(d), "ln2": L.rmsnorm_init(d),
+             "blk": rk.rwkv_block_init(k1, d, cfg.d_ff, cfg.rwkv_head_dim,
+                                       dtype)}
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _block_apply(p, x, cfg: ModelConfig, kind: str, positions, *,
+                 mask=None, media=None, cache=None, window=0,
+                 prefill_fresh=False):
+    """returns (x, aux, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "rwkv":
+        h, st = rk.rwkv_time_mix(p["blk"], L.rmsnorm(p["ln1"], x),
+                                 cfg.rwkv_head_dim,
+                                 state=None if cache is None else cache["tm"])
+        x = x + h
+        h, st2 = rk.rwkv_channel_mix(p["blk"], L.rmsnorm(p["ln2"], x),
+                                     state=None if cache is None
+                                     else cache["cm"])
+        x = x + h
+        newc = None if cache is None else {"tm": st, "cm": st2}
+        return x, aux, newc
+    if kind == "rec":
+        h, st = rg.rglru_block_apply(p["rec"], L.rmsnorm(p["ln1"], x),
+                                     state=None if cache is None
+                                     else cache["rec"])
+        x = x + h
+        x = x + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], x), cfg.activation)
+        newc = None if cache is None else {"rec": st}
+        return x, aux, newc
+    if kind == "cross":
+        h, _ = L.attention(p["attn"], L.rmsnorm(p["ln1"], x), cfg, positions,
+                           xa=media, mask=None)
+        x = x + h
+        x = x + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], x), cfg.activation)
+        return x, aux, cache  # cross KV is position-independent; cache unused
+    # self / moe
+    h, newattn = L.attention(p["attn"], L.rmsnorm(p["ln1"], x), cfg,
+                             positions, mask=mask,
+                             cache=None if cache is None else cache["attn"],
+                             window=window, prefill_fresh=prefill_fresh)
+    x = x + h
+    if kind == "moe":
+        h, aux = moe_mod.moe_apply(p["moe"], L.rmsnorm(p["ln2"], x),
+                                   n_experts=cfg.n_experts, top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor)
+    else:
+        h = L.mlp(p["mlp"], L.rmsnorm(p["ln2"], x), cfg.activation)
+    x = x + h
+    newc = None if cache is None else {"attn": newattn}
+    return x, aux, newc
+
+
+# ---------------------------------------------------------------------------
+# Layer plan: (kind, count) groups that scan homogeneously
+# ---------------------------------------------------------------------------
+
+
+def layer_plan(cfg: ModelConfig):
+    """Returns a list of (scan_kinds: tuple, n_repeat). Each group is a
+    super-block of len(scan_kinds) layers, repeated n_repeat times by scan."""
+    if cfg.family == "rwkv6":
+        return [(("rwkv",), cfg.n_layers)]
+    if cfg.family == "hybrid_rglru":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        pat = tuple("self" if k == "attn" else k for k in pat)
+        n_full = cfg.n_layers // len(pat)
+        plan = [(pat, n_full)]
+        rem = cfg.n_layers % len(pat)
+        if rem:
+            plan.append((pat[:rem], 1))
+        return plan
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        k = cfg.cross_attn_every
+        pat = ("cross",) + ("self",) * (k - 1)
+        assert cfg.n_layers % k == 0
+        return [(pat, cfg.n_layers // k)]
+    kind = "moe" if cfg.family == "moe" else "self"
+    return [((kind,), cfg.n_layers)]
+
+
+def _window_for(cfg: ModelConfig, kind: str) -> int:
+    if cfg.family == "hybrid_rglru" and kind == "self":
+        return cfg.window
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# init / forward
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig):
+    dtype = DTYPES[cfg.param_dtype]
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = L.embed_init(keys[0], cfg.vocab, cfg.d_model,
+                                          cfg.tie_embeddings, dtype)
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model)
+    if cfg.family == "vlm" and cfg.d_media and cfg.d_media != cfg.d_model:
+        params["embed_media"] = L.dense_init(keys[1], cfg.d_media,
+                                             cfg.d_model, dtype=dtype)
+    groups = []
+    for gi, (pat, n_rep) in enumerate(layer_plan(cfg)):
+        gkey = jax.random.fold_in(keys[2], gi)
+
+        def one(k):
+            ks = jax.random.split(k, len(pat))
+            return {f"b{i}": _block_init(ks[i], cfg, pat[i], dtype)
+                    for i in range(len(pat))}
+
+        stack = jax.vmap(one)(jax.random.split(gkey, n_rep))
+        groups.append(stack)
+    params["groups"] = groups
+    return params
+
+
+def _run_groups(params, x, cfg, positions, *, mask, media, caches, remat,
+                windows_needed=True, prefill_fresh=False):
+    """Scan each (super-block) group; returns (x, aux_total, new_caches)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for gi, (pat, n_rep) in enumerate(layer_plan(cfg)):
+        stack = params["groups"][gi]
+        gcache = None if caches is None else caches[gi]
+
+        def superblock(x, scanned, pat=pat):
+            bparams, bcache = scanned
+            aux_sb = jnp.zeros((), jnp.float32)
+            newc = {}
+            for i, kind in enumerate(pat):
+                x, aux_i, nc = _block_apply(
+                    bparams[f"b{i}"], x, cfg, kind, positions, mask=mask,
+                    media=media,
+                    cache=None if bcache is None else bcache[f"b{i}"],
+                    window=_window_for(cfg, kind),
+                    prefill_fresh=prefill_fresh)
+                aux_sb = aux_sb + aux_i
+                if nc is not None:
+                    newc[f"b{i}"] = nc
+            return x, aux_sb, (newc if newc else None)
+
+        if remat:
+            superblock = jax.checkpoint(
+                superblock, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def scan_fn(carry, scanned):
+            x, aux = carry
+            x, aux_sb, newc = superblock(x, scanned)
+            return (x, aux + aux_sb), newc
+
+        (x, aux_total), newc_stack = jax.lax.scan(
+            scan_fn, (x, aux_total), (stack, gcache))
+        new_caches.append(newc_stack)
+    return x, aux_total, (new_caches if caches is not None else None)
+
+
+def _prep_media(params, media, dtype):
+    if media is None:
+        return None
+    media = media.astype(dtype)
+    if "embed_media" in params:
+        media = media @ params["embed_media"]
+    return annotate(media, "batch", None, "embed")
+
+
+def _pad_for_rwkv(cfg, tokens):
+    if cfg.family != "rwkv6":
+        return tokens, tokens.shape[1]
+    t = tokens.shape[1]
+    pad = -t % rk.CHUNK
+    if pad:
+        tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+    return tokens, t
+
+
+def forward(params, tokens, cfg: ModelConfig, *, media=None,
+            remat: bool = False, features: bool = False):
+    """Training/eval forward: tokens [B, T] -> (logits [B, T, V], aux).
+    ``features=True`` returns the final-norm hidden states instead of
+    logits (the chunked-xent loss unembeds per chunk)."""
+    dtype = DTYPES[cfg.dtype]
+    params = cast_params(params, dtype)
+    tokens, t_orig = _pad_for_rwkv(cfg, tokens)
+    b, t = tokens.shape
+    x = L.embed(params, tokens, dtype)
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    mask = None
+    if cfg.family not in ("rwkv6",) and t < L.ATTN_CHUNK_T:
+        # long sequences use the chunked path (builds its own band masks);
+        # materialising a [T, T] mask at 32k+ would itself blow memory
+        win = cfg.window if cfg.family == "hybrid_rglru" else 0
+        mask = L.causal_mask(t, t, window=win)
+    media = _prep_media(params, media, dtype)
+    x, aux, _ = _run_groups(params, x, cfg, positions, mask=mask,
+                            media=media, caches=None, remat=remat)
+    x = L.rmsnorm(params["final_norm"], x)
+    if features:
+        return x[:, :t_orig], aux
+    logits = L.unembed(params, x, vocab=cfg.vocab)
+    return logits[:, :t_orig], aux
+
+
+# ---------------------------------------------------------------------------
+# KV-cache / recurrent-state serving path
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None, start=None) -> list:
+    """Stacked caches matching the layer plan (leading dim = scan length)."""
+    dtype = DTYPES[cfg.dtype] if dtype is None else dtype
+    kv_dtype = dtype
+    if cfg.kv_quant != "none":
+        from repro.core.bitops import word_dtype
+        kv_dtype = word_dtype(int(cfg.kv_quant.replace("takum", "")))
+    caches = []
+    for pat, n_rep in layer_plan(cfg):
+        def one_cache():
+            c = {}
+            for i, kind in enumerate(pat):
+                if kind in ("self", "moe"):
+                    attn = {
+                        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads,
+                                        cfg.hd), kv_dtype),
+                        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads,
+                                        cfg.hd), kv_dtype),
+                        "pos": jnp.zeros((), jnp.int32),
+                    }
+                    if start is not None:
+                        # per-sequence first-valid position (left-padded
+                        # prompts must not attend to their padding)
+                        attn["start"] = jnp.asarray(start, jnp.int32)
+                    c[f"b{i}"] = {"attn": attn}
+                elif kind == "rec":
+                    c[f"b{i}"] = {"rec": rg.rglru_decode_state(
+                        batch, cfg.lru_width or cfg.d_model, dtype)}
+                elif kind == "rwkv":
+                    st = rk.rwkv_decode_state(batch, cfg.d_model,
+                                              cfg.rwkv_head_dim, dtype)
+                    c[f"b{i}"] = {"tm": {"S": st["S"],
+                                         "tm_prev": st["tm_prev"]},
+                                  "cm": {"cm_prev": st["cm_prev"]}}
+                elif kind == "cross":
+                    c[f"b{i}"] = {}
+            return c
+
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_rep,) + x.shape).copy()
+            if hasattr(x, "shape") else x,
+            one_cache())
+        caches.append(stacked)
+    return caches
+
+
+def forward_cached(params, tokens, cfg: ModelConfig, caches, *, pos,
+                   media=None, last_only: bool = False):
+    """Prefill (T > 1) or decode (T == 1) with state. Returns
+    (logits [B, T_eff, V], new_caches). ``pos`` is the position of
+    tokens[:, 0]. ``last_only`` unembeds just the final position —
+    prefill never needs the other 32k x vocab logits (at 256k vocab
+    that is ~16 GB/device of avoided traffic)."""
+    dtype = DTYPES[cfg.dtype]
+    params = cast_params(params, dtype)
+    b, t = tokens.shape
+    if cfg.family == "rwkv6" and t > 1:
+        # stateful prefill must not pollute the carried state with padding
+        assert t % rk.CHUNK == 0, \
+            f"rwkv6 prefill length must be a multiple of {rk.CHUNK}"
+    t_orig = t
+    x = L.embed(params, tokens, dtype)
+    positions = pos + jnp.broadcast_to(jnp.arange(t), (b, t))
+    media = _prep_media(params, media, dtype)
+    # t > 1 with a cache means a fresh (pos==0) prefill in our serving
+    # flows; the chunked-attention fast path relies on that invariant
+    x, _, new_caches = _run_groups(params, x, cfg, positions, mask=None,
+                                   media=media, caches=caches, remat=False,
+                                   prefill_fresh=t > 1)
+    x = L.rmsnorm(params["final_norm"], x)
+    if last_only:
+        logits = L.unembed(params, x[:, t_orig - 1:t_orig], vocab=cfg.vocab)
+    else:
+        logits = L.unembed(params, x[:, :t_orig], vocab=cfg.vocab)
+    return logits, new_caches

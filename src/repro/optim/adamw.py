@@ -1,0 +1,147 @@
+"""AdamW + LR schedules, in both structured and flat forms.
+
+The *flat* form treats the whole parameter set as one vector: AdamW is
+elementwise, so flattening is exact, and it is what the ZeRO-1 manual-DP
+train step wants — the flat gradient is ring reduce-scattered
+(optionally takum-compressed), each data shard updates its slice of the
+flat optimizer state, and updated parameters are all-gathered back
+(dist/collectives.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "AdamWState", "init_state", "apply_update",
+           "flatten_like", "unflatten_like", "schedule_lr", "global_norm",
+           "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"      # 'cosine' | 'linear' | 'const'
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+
+def schedule_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "const":
+        decay = 1.0
+    else:
+        frac = jnp.clip((step - cfg.warmup_steps) /
+                        jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        else:
+            decay = 1.0 - frac
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def init_state(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def apply_update(params, grads, state: AdamWState, cfg: AdamWConfig
+                 ) -> Tuple[Any, AdamWState]:
+    """Structured AdamW (grads already averaged/cast)."""
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(new_m, new_v, step)
+
+
+# ---------------------------------------------------------------------------
+# Flat (ZeRO-friendly) helpers
+# ---------------------------------------------------------------------------
+
+
+def flatten_like(tree, pad_to: int = 1):
+    """Concatenate all leaves (f32) into one vector padded to a multiple of
+    ``pad_to``. Returns (vector, unflatten_spec)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    sizes = [l.size for l in leaves]
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    pad = (-flat.size) % pad_to
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, (treedef, sizes, shapes, dtypes, pad)
+
+
+def unflatten_like(flat, spec):
+    treedef, sizes, shapes, dtypes, pad = spec
+    if pad:
+        flat = flat[:-pad] if pad else flat
+    out = []
+    ofs = 0
+    for size, shape, dt in zip(sizes, shapes, dtypes):
+        out.append(flat[ofs:ofs + size].reshape(shape).astype(dt))
+        ofs += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def flat_adamw_update(flat_p, flat_g, flat_m, flat_v, step, cfg: AdamWConfig):
+    """Elementwise AdamW on flat slices (each shard's slice in ZeRO-1)."""
+    lr = schedule_lr(cfg, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    m = cfg.b1 * flat_m + (1 - cfg.b1) * flat_g
+    v = cfg.b2 * flat_v + (1 - cfg.b2) * flat_g * flat_g
+    u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps) + cfg.weight_decay * flat_p
+    return flat_p - lr * u, m, v

@@ -1,0 +1,114 @@
+"""Batched serving engine: bucketed prefill + jitted decode loop.
+
+Supports greedy and temperature sampling, per-sequence stop conditions,
+takum-quantised KV caches (``cfg.kv_quant``) and takum weight-only
+quantisation (``quantize_weights``). Throughput-oriented: one compiled
+decode step for the whole batch; finished sequences keep decoding into a
+scratch slot until the batch drains (static shapes — the standard
+fixed-batch serving pattern; continuous batching swaps finished slots
+between compiled steps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model
+
+__all__ = ["ServeEngine", "quantize_weights"]
+
+
+def quantize_weights(params, fmt: str = "takum8", *,
+                     skip_substrings=("embed", "unembed", "scale", "norm")):
+    """Replace float weight matrices by (words, n) wire tuples — decoded on
+    use by quant_matmul — OR (default here) fake-quantise in place so the
+    whole model runs unchanged. In-place fake-quant is what serving
+    accuracy evaluations use; the fused decode-matmul kernel path is
+    exercised separately in kernels/ and benchmarks/."""
+    from repro.core import quant as q
+    n = int(fmt.replace("takum", ""))
+    spec = q.QuantSpec(fmt="takum", n=n, scale="per_tensor")
+
+    def visit(path, leaf):
+        name = "/".join(str(p) for p in path)
+        if leaf.ndim >= 2 and not any(s in name for s in skip_substrings):
+            return q.dequantize(q.quantize(leaf, spec)).astype(leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    params: object
+    cfg: ModelConfig
+    max_len: int
+    temperature: float = 0.0
+    eos_id: int = -1          # -1: never stop early
+    seed: int = 0
+
+    def __post_init__(self):
+        cfg = self.cfg
+
+        def _prefill(params, tokens, cache, media):
+            return model.prefill(params, tokens, cfg, cache, media=media)
+
+        def _step(params, tok, cache, pos, key, temp):
+            logits, cache = model.decode_step(params, tok, cfg, cache,
+                                              pos=pos)
+            if self.temperature > 0.0:
+                nxt = jax.random.categorical(key, logits / temp, axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            return nxt.astype(jnp.int32)[:, None], cache
+
+        self._prefill = jax.jit(_prefill)
+        self._step = jax.jit(_step)
+
+    def generate(self, prompts: List[List[int]], max_new: int,
+                 media: Optional[np.ndarray] = None) -> List[List[int]]:
+        cfg = self.cfg
+        b = len(prompts)
+        plen = max(len(p) for p in prompts)
+        if cfg.family == "rwkv6":
+            plen = -(-plen // 64) * 64  # chunk alignment
+        prompt = np.zeros((b, plen), np.int32)
+        start = np.zeros((b,), np.int32)
+        for i, p in enumerate(prompts):  # left-pad (last token at the end)
+            prompt[i, plen - len(p):] = p
+            start[i] = plen - len(p)
+
+        # per-sequence start indices mask out the left padding (recurrent
+        # families absorb pads into their state: use equal-length prompts
+        # for rwkv6/hybrid)
+        use_start = cfg.family not in ("rwkv6", "hybrid_rglru") and \
+            start.any()
+        cache = model.init_cache(cfg, batch=b, max_len=plen + max_new + 8,
+                                 start=start if use_start else None)
+        logits_last, cache = self._prefill(
+            self.params, jnp.asarray(prompt), cache,
+            None if media is None else jnp.asarray(media))
+        tok = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)[:, None]
+
+        key = jax.random.PRNGKey(self.seed)
+        out = [list(p) for p in prompts]
+        done = np.zeros(b, bool)
+        for s in range(max_new):
+            for i in range(b):
+                if not done[i]:
+                    out[i].append(int(tok[i, 0]))
+            done |= np.asarray(tok[:, 0]) == self.eos_id
+            if done.all():
+                break
+            key, sub = jax.random.split(key)
+            tok, cache = self._step(self.params, tok, cache,
+                                    jnp.asarray(plen + s), sub,
+                                    jnp.asarray(max(self.temperature,
+                                                    1e-6)))
+        return out

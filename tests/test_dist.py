@@ -1,0 +1,18 @@
+"""Drives the multi-device distributed selftest in a subprocess (the main
+pytest process must keep seeing exactly 1 CPU device)."""
+
+import os
+import subprocess
+import sys
+
+
+def test_dist_selftest_8_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.dist.selftest"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "SELFTEST OK" in out.stdout

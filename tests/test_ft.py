@@ -1,0 +1,62 @@
+"""Fault-tolerance layer: watchdog, straggler detection, elastic re-mesh."""
+
+from repro.ft.watchdog import Heartbeat, Watchdog, plan_elastic_remesh
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_watchdog_dead_host_detection():
+    clk = FakeClock()
+    wd = Watchdog(4, dead_after=60.0, now_fn=clk)
+    for h in range(4):
+        wd.beat(Heartbeat(host=h, step=10, t=0.0, step_time=1.0))
+    assert wd.healthy()
+    clk.t = 30.0
+    wd.beat(Heartbeat(host=0, step=11, t=30.0, step_time=1.0))
+    wd.beat(Heartbeat(host=1, step=11, t=30.0, step_time=1.0))
+    wd.beat(Heartbeat(host=2, step=11, t=30.0, step_time=1.0))
+    clk.t = 70.0  # host 3 last beat at t=0 -> dead
+    assert wd.dead_hosts() == [3]
+    assert not wd.healthy()
+
+
+def test_watchdog_straggler_detection():
+    clk = FakeClock()
+    wd = Watchdog(4, straggle_factor=2.0, now_fn=clk)
+    for h, st in enumerate([1.0, 1.1, 0.9, 5.0]):
+        wd.beat(Heartbeat(host=h, step=5, t=0.0, step_time=st))
+    assert wd.stragglers() == [3]
+
+
+def test_elastic_remesh_plan():
+    # lose a host from 512: largest pow2 data axis that fits
+    plan = plan_elastic_remesh(512 - 8, model_axis=16)
+    assert plan["mesh_shape"] == (16, 16)
+    assert plan["chips"] == 256
+    plan = plan_elastic_remesh(512, model_axis=16)
+    assert plan["mesh_shape"] == (32, 16)
+    assert plan_elastic_remesh(8, model_axis=16) is None
+
+
+def test_remesh_plus_restore_roundtrip(tmp_path):
+    """Full elastic path: checkpoint on mesh A, plan new mesh, restore."""
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import manager as ckpt
+
+    tree = {"w": np.arange(64, dtype=np.float32).reshape(8, 8)}
+    d = str(tmp_path / "ck")
+    ckpt.save(1, tree, d)
+    plan = plan_elastic_remesh(1, model_axis=1)
+    assert plan["mesh_shape"] == (1, 1)
+    mesh = jax.make_mesh(plan["mesh_shape"], plan["axes"])
+    got, _ = ckpt.restore(
+        d, tree, sharding_fn=lambda n, s: NamedSharding(mesh, P()))
+    np.testing.assert_array_equal(np.asarray(got["w"]), tree["w"])

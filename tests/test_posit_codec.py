@@ -1,0 +1,99 @@
+"""Posit baseline codec validation against the Posit Standard 2022 golden."""
+
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro.core import golden, posit
+
+EXHAUSTIVE_N = [8, 10, 12]
+
+
+def all_words(n):
+    return np.arange(1 << n, dtype=np.uint32)
+
+
+def _rep7_value(s, e, frac, wf):
+    f = Fraction(int(frac), 1 << wf)
+    return (-1) ** int(s) * (1 + f) * Fraction(2) ** int(e)
+
+
+def _rep8_value(s, e, frac, wf):
+    f = Fraction(int(frac), 1 << wf)
+    return (Fraction(1 - 3 * int(s)) + f) * Fraction(2) ** int(e)
+
+
+@pytest.mark.parametrize("n", EXHAUSTIVE_N)
+def test_decode_sm_exhaustive(n):
+    words = all_words(n)
+    dec = posit.decode_sm(words, n)
+    wf = posit.frac_width(n)
+    s = np.asarray(dec.s); e = np.asarray(dec.e); fr = np.asarray(dec.frac)
+    for T in range(1 << n):
+        v = golden.posit_decode_value(T, n)
+        if v is None:
+            assert bool(np.asarray(dec.is_nar)[T]); continue
+        if v == 0:
+            assert bool(np.asarray(dec.is_zero)[T]); continue
+        assert _rep7_value(s[T], e[T], fr[T], wf) == v, T
+
+
+@pytest.mark.parametrize("n", EXHAUSTIVE_N)
+def test_decode_2c_exhaustive(n):
+    words = all_words(n)
+    dec = posit.decode_2c(words, n)
+    wf = posit.frac_width(n)
+    s = np.asarray(dec.s); e = np.asarray(dec.e); fr = np.asarray(dec.frac)
+    for T in range(1 << n):
+        v = golden.posit_decode_value(T, n)
+        if v is None or v == 0:
+            continue
+        assert _rep8_value(s[T], e[T], fr[T], wf) == v, \
+            (T, s[T], e[T], fr[T], v)
+
+
+@pytest.mark.parametrize("n", EXHAUSTIVE_N + [16])
+def test_roundtrip_exhaustive(n):
+    words = all_words(n)
+    dec = posit.decode_2c(words, n)
+    enc = posit.encode(dec.s, dec.e, dec.frac, n, wm=posit.frac_width(n),
+                       is_zero=dec.is_zero, is_nar=dec.is_nar)
+    np.testing.assert_array_equal(np.asarray(enc, np.uint32), words)
+
+
+@pytest.mark.parametrize("n", [8, 12])
+def test_float_encode_nearest_vs_golden(n):
+    rng = np.random.default_rng(7)
+    xs = np.concatenate([
+        rng.normal(size=256).astype(np.float32),
+        (rng.normal(size=64) * 1e12).astype(np.float32),
+        (rng.normal(size=64) * 1e-12).astype(np.float32),
+        np.float32([0, 1, -1, 0.5, -0.5, 4.0, -4.0, 65536.0, -65536.0]),
+    ])
+    words = np.asarray(posit.float_to_posit(xs, n), np.uint32)
+    for x, w in zip(xs, words):
+        exp = golden.posit_encode_nearest(Fraction(float(x)), n)
+        assert w == exp, (float(x), w, exp)
+
+
+def test_saturation_and_specials():
+    n = 10
+    xs = np.float32([np.inf, -np.inf, np.nan, 1e38, -1e38, 1e-40, -1e-40])
+    w = np.asarray(posit.float_to_posit(xs, n), np.uint32)
+    maxpos = (1 << (n - 1)) - 1
+    assert w[0] == maxpos
+    assert w[1] == ((1 << n) - maxpos) & ((1 << n) - 1)  # -maxpos
+    assert w[2] == 1 << (n - 1)                          # NaR
+    assert w[3] == maxpos and w[4] == (1 << n) - maxpos
+    assert w[5] == 1                                     # minpos, not 0
+    assert w[6] == (1 << n) - 1                          # -minpos
+
+
+@pytest.mark.parametrize("n", [9, 14, 16])
+def test_sm_equals_2c_values(n):
+    """Both decodings must produce identical posit values."""
+    words = all_words(n)
+    a = posit.posit_to_float(words, n, variant="sm")
+    b = posit.posit_to_float(words, n, variant="2c")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,22 @@
+"""Unequal-length prompts: the engine's left-padding must be masked out —
+each sequence's generation must match its unbatched reference."""
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import model
+from repro.serve.engine import ServeEngine
+
+
+def test_unequal_prompts_match_unbatched():
+    cfg = get_arch("phi3-medium-14b").reduced
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    prompts = [list(rng.integers(0, cfg.vocab, n)) for n in (6, 11, 16)]
+
+    eng = ServeEngine(params, cfg, max_len=48)
+    batched = eng.generate(prompts, max_new=4)
+    for i, p in enumerate(prompts):
+        solo = ServeEngine(params, cfg, max_len=48).generate([p], max_new=4)
+        assert batched[i] == solo[0], (i, batched[i], solo[0])

@@ -1,0 +1,49 @@
+"""takum64 coverage: runs in a subprocess with jax_enable_x64 so the
+uint64 lanes exist without polluting the main test process."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+    from repro.core import golden, takum
+    from repro.core.takum import frac_width
+
+    n = 64
+    rng = np.random.default_rng(0)
+    words = rng.integers(0, 1 << 63, 128, dtype=np.uint64) | (
+        rng.integers(0, 2, 128, dtype=np.uint64) << 63)
+
+    dec = takum.decode(words, n)
+    s = np.asarray(dec.s); c = np.asarray(dec.val)
+    mant = np.asarray(dec.mant, np.uint64)
+    for i, T in enumerate(words):
+        f = golden.takum_decode_fields(int(T), n)
+        assert s[i] == f.S and c[i] == f.c, (i, int(T))
+        assert int(mant[i]) == f.m_num << f.r
+
+    enc = takum.encode(dec.s, dec.val, dec.mant, n, wm=frac_width(n),
+                       is_zero=dec.is_zero, is_nar=dec.is_nar)
+    np.testing.assert_array_equal(np.asarray(enc, np.uint64), words)
+
+    # hw-path equivalence at n=64 (extended takum in uint64 lanes)
+    a = takum.decode(words, n, hw_path=True)
+    np.testing.assert_array_equal(np.asarray(a.val), c)
+    print("TAKUM64 OK")
+""")
+
+
+def test_takum64_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", SCRIPT],
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))),
+                         env=env, capture_output=True, text=True,
+                         timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "TAKUM64 OK" in out.stdout

@@ -1,0 +1,163 @@
+"""Validation of the paper's hardware dataflow: Propositions 1-2, Tables
+I-II, and exact equivalence of the hardware-faithful codec path with the
+direct path."""
+
+import numpy as np
+import pytest
+
+from repro.core import golden, takum
+from repro.core.bitops import floor_log2_u8, lod8_lut
+from repro.core.takum import frac_width
+
+
+def all_words(n):
+    return np.arange(1 << n, dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Proposition 1 / Corollary 1: conditional characteristic negation
+# ---------------------------------------------------------------------------
+
+
+def test_proposition_1_characteristic_negation():
+    """Negating (D, R, C) bitwise negates c in two's complement, same r."""
+    n = 12
+    for T in range(1 << n):
+        f = golden.takum_decode_fields(T, n)
+        if f.is_zero or f.is_nar:
+            continue
+        # flip D, R and C bits; keep S and M
+        flip_mask = (((1 << (4 + f.r)) - 1) << f.p) & ((1 << (n - 1)) - 1)
+        T2 = T ^ flip_mask
+        f2 = golden.takum_decode_fields(T2, n)
+        if f2.is_zero or f2.is_nar:
+            continue  # the negated pattern may hit the special encoding
+        assert f2.r == f.r
+        assert f2.c == -f.c - 1, (T, f.c, f2.c)
+
+
+def test_proposition_2_characteristic_precursor():
+    """(D==0 ? ~c : c) + 1 == 2^r + (C bits, inverted iff D==0)."""
+    n = 14
+    for T in range(0, 1 << n, 7):  # stride: plenty of coverage, fast
+        f = golden.takum_decode_fields(T, n)
+        if f.is_zero or f.is_nar:
+            continue
+        uC = (T >> f.p) & ((1 << f.r) - 1)
+        if f.D == 0:
+            lhs = (~f.c) + 1
+            rhs = (1 << f.r) + ((~uC) & ((1 << f.r) - 1))
+        else:
+            lhs = f.c + 1
+            rhs = (1 << f.r) + uC
+        assert lhs == rhs, (T, f)
+
+
+# ---------------------------------------------------------------------------
+# Table I: biases -2^(r+1) as 9-bit two's complement with r zero LSBs
+# ---------------------------------------------------------------------------
+
+
+def test_table_1_bias_patterns():
+    expected = {
+        0: 0b111111110, 1: 0b111111100, 2: 0b111111000, 3: 0b111110000,
+        4: 0b111100000, 5: 0b111000000, 6: 0b110000000, 7: 0b100000000,
+    }
+    for r, pat in expected.items():
+        assert (-(1 << (r + 1))) & 0x1FF == pat
+        # the r LSBs are zero => bias can be OR-ed with the r char bits
+        assert pat & ((1 << r) - 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# Table II: under/overflow characteristic bounds for n in 2..11
+# ---------------------------------------------------------------------------
+
+TABLE_II = {
+    2: (-1, 0), 3: (-16, 15), 4: (-64, 63), 5: (-128, 127),
+    6: (-192, 191), 7: (-224, 223), 8: (-240, 239), 9: (-248, 247),
+    10: (-252, 251), 11: (-254, 253),
+}
+
+
+@pytest.mark.parametrize("n", sorted(TABLE_II))
+def test_table_2_bounds(n):
+    """Truncating the 12-bit word of characteristic c to n bits hits the
+    0-pattern (round-down underflows) iff c <= lo, and the all-ones body
+    (round-up overflows) iff c >= hi."""
+    lo, hi = TABLE_II[n]
+    # build the 12-bit word for each c (mantissa bits zero), S = 0
+    for c in range(-254, 255):
+        w12 = None
+        for T in range(1 << 11):  # S=0 words only
+            f = golden.takum_decode_fields(T, 12)
+            if not f.is_zero and not f.is_nar and f.c == c and f.m_num == 0:
+                w12 = T
+                break
+        assert w12 is not None
+        body = (w12 >> (12 - n)) & ((1 << (n - 1)) - 1)
+        assert (body == 0) == (c <= lo), (n, c, body)
+        assert (body == (1 << (n - 1)) - 1) == (c >= hi), (n, c, body)
+
+
+# ---------------------------------------------------------------------------
+# LOD: nibble-LUT design == compare chain
+# ---------------------------------------------------------------------------
+
+
+def test_lod8_designs_agree():
+    x = np.arange(1, 256, dtype=np.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(floor_log2_u8(x)), np.asarray(lod8_lut(x)))
+
+
+# ---------------------------------------------------------------------------
+# Hardware path == direct path (decode and encode), exhaustive
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [12, 13, 16])
+def test_hw_decode_equals_direct(n):
+    words = all_words(n)
+    a = takum.decode(words, n, hw_path=False)
+    b = takum.decode(words, n, hw_path=True)
+    np.testing.assert_array_equal(np.asarray(a.val), np.asarray(b.val))
+    np.testing.assert_array_equal(np.asarray(a.mant), np.asarray(b.mant))
+    a_e = takum.decode(words, n, output_exponent=True, hw_path=False)
+    b_e = takum.decode(words, n, output_exponent=True, hw_path=True)
+    np.testing.assert_array_equal(np.asarray(a_e.val), np.asarray(b_e.val))
+
+
+@pytest.mark.parametrize("n", [12, 16])
+def test_hw_decode_small_n(n):
+    # also cover the ghost-bit widths through the hw characteristic unit
+    for nn in [8, 10]:
+        words = all_words(nn)
+        a = takum.decode(words, nn, hw_path=False)
+        b = takum.decode(words, nn, hw_path=True)
+        np.testing.assert_array_equal(np.asarray(a.val), np.asarray(b.val))
+
+
+@pytest.mark.parametrize("n", [12, 16])
+def test_hw_encode_equals_direct(n):
+    """Extended-takum (§V-D) + pattern predictor (§V-A) == direct rounder,
+    over every decodable input and random rounding tails."""
+    rng = np.random.default_rng(4)
+    wm = n - 5
+    m = 1 << min(n, 14)
+    s = rng.integers(0, 2, m).astype(np.int32)
+    c = rng.integers(-255, 255, m).astype(np.int32)
+    mant = rng.integers(0, 1 << wm, m).astype(np.uint32)
+    sticky = rng.integers(0, 2, m).astype(bool)
+    a = takum.encode(s, c, mant, n, wm=wm, sticky=sticky, hw_path=False)
+    b = takum.encode(s, c, mant, n, wm=wm, sticky=sticky, hw_path=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("n", [12, 16])
+def test_hw_encode_roundtrip(n):
+    words = all_words(n)
+    dec = takum.decode(words, n)
+    enc = takum.encode(dec.s, dec.val, dec.mant, n, wm=frac_width(n),
+                       is_zero=dec.is_zero, is_nar=dec.is_nar, hw_path=True)
+    np.testing.assert_array_equal(np.asarray(enc, np.uint32), words)
