@@ -1,0 +1,28 @@
+# Convenience targets. Tier-1 verification is `make check`.
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: check test kernel-parity bench bench-json dist-selftest
+
+# tier-1 tests + interpret-mode kernel parity (the kernel parity suites
+# are part of tier-1; they are also runnable standalone below)
+check: test kernel-parity
+
+test:
+	$(PY) -m pytest -x -q
+
+# interpret-mode Pallas kernels vs jnp oracles only (fast inner loop
+# while iterating on kernels)
+kernel-parity:
+	$(PY) -m pytest -q tests/test_kernels.py tests/test_int_reconstruct.py
+
+bench:
+	$(PY) -m benchmarks.run
+
+# perf trajectory artifact only (decode/encode/qmatmul -> BENCH_codec.json)
+bench-json:
+	$(PY) -m benchmarks.run --only codec_json
+
+dist-selftest:
+	$(PY) -m repro.dist.selftest

@@ -1,0 +1,115 @@
+"""Machine-readable codec/qmatmul throughput -> BENCH_codec.json.
+
+Tracks the perf trajectory of the two hot paths this repo optimises:
+
+* decode / encode / fused fake-quant throughput (elements/s and wire
+  GB/s) for n in {8, 16} — the integer-only reconstruction path;
+* weight-only-quantised matmul at a serving decode shape (small M, big
+  weights), reported as effective weight GB/s (weight wire bytes / wall
+  time — the roofline quantity serving cares about).
+
+On non-TPU hosts the qmatmul numbers use the XLA fallback path
+(``use_kernel=False``) — the Pallas interpreter is a correctness tool,
+not a performance proxy — and the JSON records which path ran so
+successive BENCH_codec.json files stay comparable.
+"""
+
+from __future__ import annotations
+
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import takum
+from repro.core.bitops import word_dtype
+from repro.kernels import ops
+from benchmarks.common import csv_line, time_fn
+
+OUT_PATH = "BENCH_codec.json"
+N_ELEMS = 1 << 21
+QMM_M, QMM_K, QMM_N = 64, 2048, 2048
+WIDTHS = (8, 16)
+
+
+def _codec_section(rng) -> dict:
+    out: dict = {}
+    x = jnp.asarray(rng.normal(size=N_ELEMS).astype(np.float32) *
+                    np.exp(rng.normal(size=N_ELEMS) * 4).astype(np.float32))
+    for n in WIDTHS:
+        words = jnp.asarray(
+            rng.integers(0, 1 << n, N_ELEMS, dtype=np.int64)
+        ).astype(word_dtype(n))
+        dec = jax.jit(lambda w, n=n: takum.takum_to_float(w, n))
+        enc = jax.jit(lambda v, n=n: takum.float_to_takum(v, n))
+        fq = jax.jit(lambda v, n=n: takum.takum_to_float(
+            takum.float_to_takum(v, n), n))
+        t_dec = time_fn(dec, words)
+        t_enc = time_fn(enc, x)
+        t_fq = time_fn(fq, x)
+        for name, t in [("decode", t_dec), ("encode", t_enc),
+                        ("fake_quant", t_fq)]:
+            out.setdefault(name, {})[f"takum{n}"] = {
+                "elems": N_ELEMS,
+                "us": round(t * 1e6, 2),
+                "gelems_per_s": round(N_ELEMS / t / 1e9, 4),
+                "wire_gb_per_s": round(N_ELEMS * n / 8 / t / 1e9, 4),
+            }
+    return out
+
+
+def _qmatmul_section(rng, use_kernel: bool) -> dict:
+    out: dict = {}
+    x = jnp.asarray(rng.normal(size=(QMM_M, QMM_K)).astype(np.float32))
+    w = (rng.normal(size=(QMM_K, QMM_N)).astype(np.float32)
+         / np.sqrt(QMM_K))
+    refo = np.asarray(x) @ w
+    for n in WIDTHS:
+        w_words = takum.float_to_takum(w, n)
+        qmm = jax.jit(lambda a, ww, n=n: ops.quant_matmul(
+            a, ww, n, use_kernel, None))
+        t = time_fn(qmm, x, w_words)
+        got = np.asarray(qmm(x, w_words))
+        rel = float(np.linalg.norm(got - refo) / np.linalg.norm(refo))
+        wire_bytes = QMM_K * QMM_N * n // 8
+        out[f"takum{n}"] = {
+            "m": QMM_M, "k": QMM_K, "n": QMM_N,
+            "us": round(t * 1e6, 2),
+            "weight_gb_per_s": round(wire_bytes / t / 1e9, 4),
+            "hbm_ratio_vs_f32": round(32 / n, 2),
+            "rel_err": rel,
+        }
+    return out
+
+
+def run(print_fn=print, out_path: str = OUT_PATH) -> dict:
+    rng = np.random.default_rng(0)
+    use_kernel = jax.default_backend() == "tpu"
+    doc = {
+        "schema": 1,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "host": platform.machine(),
+        "qmatmul_path": "pallas_weight_stationary" if use_kernel
+                        else "xla_fused_decode_dot",
+        **_codec_section(rng),
+        "qmatmul": _qmatmul_section(rng, use_kernel),
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1)
+    for name in ("decode", "encode", "fake_quant"):
+        for fmt, row in doc[name].items():
+            print_fn(csv_line(f"codec_json/{name}/{fmt}", row["us"],
+                              f"wire_gb_per_s={row['wire_gb_per_s']}"))
+    for fmt, row in doc["qmatmul"].items():
+        print_fn(csv_line(f"codec_json/qmatmul/{fmt}", row["us"],
+                          f"weight_gb_per_s={row['weight_gb_per_s']}"))
+    print_fn(f"# wrote {out_path}")
+    return doc
+
+
+if __name__ == "__main__":
+    run()

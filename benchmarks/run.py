@@ -20,9 +20,10 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from benchmarks import (compressed_allreduce, fig1_decoder_latency,
-                            fig2_decoder_area, fig3_encoder_latency,
-                            fig4_encoder_area, quant_matmul)
+    from benchmarks import (codec_json, compressed_allreduce,
+                            fig1_decoder_latency, fig2_decoder_area,
+                            fig3_encoder_latency, fig4_encoder_area,
+                            quant_matmul)
 
     benches = {
         "fig1": fig1_decoder_latency.run,
@@ -31,6 +32,8 @@ def main() -> None:
         "fig4": fig4_encoder_area.run,
         "quant_matmul": quant_matmul.run,
         "compressed_allreduce": compressed_allreduce.run,
+        # machine-readable perf trajectory: writes BENCH_codec.json
+        "codec_json": codec_json.run,
     }
     only = set(args.only.split(",")) if args.only else set(benches) | {
         "roofline"}

@@ -35,6 +35,21 @@ def main():
     print(f"takum8-w    : {[o[-8:] for o in out8]}  (seq agreement "
           f"{agree:.0%}, weight bytes /4)")
 
+    # takum8 *wire* weights: projections stored as words in HBM, decoded
+    # inside the matmul (weight-stationary kernel on TPU)
+    wparams = quantize_weights(params, "takum8", mode="wire")
+    from repro.kernels.ops import WireMatrix
+    wire_bytes = sum(
+        leaf.words.size * leaf.words.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(
+            wparams, is_leaf=lambda x: isinstance(x, WireMatrix))
+        if isinstance(leaf, WireMatrix))
+    engw = ServeEngine(wparams, cfg, max_len=64)
+    outw = engw.generate(prompts, max_new=8)
+    agree = np.mean([a[-8:] == b[-8:] for a, b in zip(base, outw)])
+    print(f"takum8-wire : {[o[-8:] for o in outw]}  (seq agreement "
+          f"{agree:.0%}, projection HBM bytes {wire_bytes})")
+
     # takum16 KV cache
     cfg16 = dataclasses.replace(cfg, kv_quant="takum16")
     eng16 = ServeEngine(params, cfg16, max_len=64)

@@ -31,12 +31,22 @@ Conventions
 Supported widths: ``6 <= n <= 32`` everywhere; ``n <= 64`` with
 ``jax_enable_x64``. (Definition 1 covers n >= 2; widths below 6 are only
 of theoretical interest and are exercised via the golden model.)
+
+Float conversion is **integer-only in both directions**:
+``float_to_takum`` disassembles the IEEE word with shifts/masks, and
+``takum_to_float`` assembles one — sign | biased exponent | fraction
+packed into an unsigned lane and bitcast, with explicit RNE gradual
+underflow and overflow-to-inf. No ldexp, float divide or transcendental
+anywhere on the hot path; the pre-existing ldexp dataflow is retained as
+``takum_to_float_ref`` and pinned bit-identical by
+tests/test_int_reconstruct.py.
 """
 
 from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import bitops
@@ -62,6 +72,7 @@ __all__ = [
     "decode_lns",
     "encode_lns",
     "takum_to_float",
+    "takum_to_float_ref",
     "float_to_takum",
     "lns_takum_to_float",
     "float_to_lns_takum",
@@ -509,21 +520,124 @@ def float_to_takum(x, n: int, *, rounding: str = "rne", rng_bits=None):
     )
 
 
+def _unbar(dec: TakumDecoded, n: int):
+    """(mf, me): magnitude fields of the linear decode, S=1 un-barred.
+
+    magnitude = (1 + mf/2^wf) * 2^me, with mf the *monotonic* fraction
+    field negated back for S=1 (two's complement + exponent borrow — the
+    inverse of the float_to_takum dance below).
+    """
+    wf = frac_width(n)
+    s, e, f = dec.s, dec.val, dec.mant
+    f_nz = f != 0
+    mf = jnp.where((s == 1) & f_nz,
+                   safe_shl(jnp.asarray(1, f.dtype), wf) - f, f)
+    me = e + ((s == 1) & ~f_nz)
+    return mf, me
+
+
+def _rne_shr(v, sh):
+    """RNE(v / 2^sh) for unsigned lanes; ``sh`` lane-varying, >= 1 (any
+    magnitude — shifts past the lane width collapse to sticky-only)."""
+    kept = safe_shr(v, sh)
+    g = bit(v, sh - 1)
+    rest_nz = (v & mask(sh - 1, v.dtype)) != 0
+    up = (g == jnp.asarray(1, v.dtype)) & (rest_nz | ((kept & jnp.asarray(1, v.dtype)) != 0))
+    return kept + up.astype(v.dtype)
+
+
+_IEEE = {  # fraction bits, exponent bias, exponent field width, NaN payload
+    jnp.dtype(jnp.float32): (23, 127, 8, 0x7FC0_0000),
+    jnp.dtype(jnp.float64): (52, 1023, 11, 0x7FF8_0000_0000_0000),
+}
+
+
 def takum_to_float(words, n: int, dtype=jnp.float32):
     """Decode n-bit linear takum words to float (value-exact where the
     target dtype permits; out-of-range magnitudes become inf/0 — float64
-    under x64 covers the full takum range exactly for p <= 52)."""
+    under x64 covers the full takum range exactly for p <= 52).
+
+    **Integer-only hot path**: the IEEE-754 word is assembled directly —
+    sign | biased exponent | fraction packed into a uint32/uint64 lane and
+    bitcast — with explicit RNE gradual underflow into the subnormal range
+    and overflow saturation to inf. No ldexp, no float divide, no
+    transcendental: shifts, adds, compares and one bitcast, so the decode
+    kernels inherit the paper's pure-integer dataflow end to end. For
+    ``wf > fraction bits`` the two-step rounding of the retained
+    :func:`takum_to_float_ref` oracle (int->float conversion, then the
+    ``1 + f`` add) is reproduced exactly, so both paths stay bit-identical.
+    Other float dtypes (e.g. bfloat16) are computed in f32 and cast.
+    """
+    _validate_n(n)
+    dt = jnp.dtype(dtype)
+    if dt not in _IEEE:
+        return takum_to_float(words, n, dtype=jnp.float32).astype(dtype)
+    if dt == jnp.dtype(jnp.float64) and not bitops.x64_enabled():
+        # jax silently degrades f64 arrays to f32 without x64: match that.
+        return takum_to_float(words, n, dtype=jnp.float32)
+    fb, ebias, ew, nan_bits = _IEEE[dt]
+
+    dec = decode_linear(words, n)
+    wf = frac_width(n)
+    mf, me = _unbar(dec, n)
+    # assembly lane: wide enough for both the IEEE word and the wf-bit
+    # mantissa field (n > 32 decodes in uint64 lanes even for f32 output)
+    adt = jnp.uint64 if (fb == 52 or n > 32) else jnp.uint32
+    mf = mf.astype(adt)
+
+    # --- significand: mf (wf fraction bits) -> fb fraction bits, RNE ------
+    sb = fb + 1
+    if wf > sb:
+        # emulate the oracle's int->float conversion: values wider than the
+        # significand are rounded to sb significant bits first
+        t = bitops.floor_log2(jnp.maximum(mf, jnp.asarray(1, adt)))
+        sh1 = jnp.maximum(t - fb, 0)
+        mf = jnp.where(sh1 > 0, safe_shl(_rne_shr(mf, sh1), sh1), mf)
+    if wf > fb:
+        frac = _rne_shr(mf, jnp.asarray(wf - fb, jnp.int32))
+    else:
+        frac = safe_shl(mf, fb - wf)
+    carry = (frac >> jnp.asarray(fb, adt)).astype(jnp.int32)  # 1 + f == 2.0
+    frac = frac & mask(fb, adt)
+
+    # --- exponent / assembly ---------------------------------------------
+    be = me + (ebias + carry)             # biased exponent, int32
+    sign = safe_shl(jnp.asarray(dec.s, adt), fb + ew)
+    emax = 2 * ebias + 1                  # all-ones exponent field
+    normal = sign | safe_shl(jnp.clip(be, 0, emax).astype(adt), fb) | frac
+    inf = sign | safe_shl(jnp.asarray(emax, adt), fb)
+    # gradual underflow: shift the full significand onto the subnormal grid
+    sig = safe_shl(jnp.asarray(1, adt), fb) | frac
+    sub = sign | _rne_shr(sig, (1 - be).astype(jnp.int32))
+    word = jnp.where(be >= emax, inf, jnp.where(be <= 0, sub, normal))
+    word = jnp.where(dec.is_zero, jnp.asarray(0, adt), word)
+    word = jnp.where(dec.is_nar, jnp.asarray(nan_bits, adt), word)
+    if fb == 23 and word.dtype != jnp.uint32:
+        word = word.astype(jnp.uint32)
+    return jax.lax.bitcast_convert_type(word, dt)
+
+
+def takum_to_float_ref(words, n: int, dtype=jnp.float32):
+    """Reference ldexp/divide reconstruction — the pre-integer-path
+    implementation, retained as the oracle for the bit-exactness tests.
+
+    The single ``ldexp`` of the original is split in two so subnormal
+    magnitudes scale through a *normal* intermediate (one exact multiply,
+    then one correctly-rounded one); on backends that keep gradual
+    underflow this makes the oracle value-correct over the whole takum
+    range. Note XLA:CPU flushes subnormal *runtime multiply results* to
+    zero, so in the subnormal band the bit-level ground truth for tests is
+    this same dataflow evaluated in numpy (see tests/test_int_reconstruct).
+    """
     _validate_n(n)
     dec = decode_linear(words, n)
     wf = frac_width(n)
-    s, e, f = dec.s, dec.val, dec.mant
-    # magnitude = (1 + mf/2^wf) * 2^me  with the S=1 un-barring:
-    f_nz = f != 0
-    mf = jnp.where((s == 1) & f_nz, safe_shl(jnp.asarray(1, f.dtype), wf) - f, f)
-    me = e + ((s == 1) & ~f_nz)
+    mf, me = _unbar(dec, n)
     mant = 1.0 + mf.astype(dtype) / jnp.asarray(1 << wf, dtype)
-    mag = jnp.ldexp(mant, me)
-    out = jnp.where(s == 1, -mag, mag)
+    fi = jnp.finfo(dtype)
+    e1 = jnp.clip(me, fi.minexp, fi.maxexp)
+    mag = jnp.ldexp(jnp.ldexp(mant, e1), me - e1)
+    out = jnp.where(dec.s == 1, -mag, mag)
     out = jnp.where(dec.is_zero, jnp.asarray(0, dtype), out)
     out = jnp.where(dec.is_nar, jnp.asarray(jnp.nan, dtype), out)
     return out.astype(dtype)

@@ -1,0 +1,12 @@
+"""Distribution layer: logical-axis sharding annotations + ring collectives.
+
+``sharding``    — logical-name activation annotations (``annotate``) and the
+                  FSDP x TP parameter placement rules used by the dry-run.
+``collectives`` — software ring reduce-scatter / all-gather / all-reduce with
+                  optional takum wire compression and error-feedback residuals
+                  (the cross-pod gradient path of ``train/trainer.py``).
+``selftest``    — ``python -m repro.dist.selftest``: multi-device functional
+                  validation on 8 host devices (driven by tests/test_dist.py).
+"""
+
+from repro.dist import collectives, sharding  # noqa: F401

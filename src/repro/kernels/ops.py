@@ -20,7 +20,7 @@ from repro.kernels import ref as kref
 from repro.kernels import takum_codec, takum_matmul, quantize as kquant
 
 __all__ = ["takum_decode", "takum_encode", "fake_quant_fused", "quant_matmul",
-           "interpret_default"]
+           "interpret_default", "WireMatrix"]
 
 
 def interpret_default() -> bool:
@@ -86,19 +86,31 @@ def _pad_to(x, m0, m1):
     return x
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
 def quant_matmul(x, w_words, n: int, use_kernel: bool = True,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 block: tuple | None = None):
     """x [..., K] @ decode(w_words [K, N]) -> [..., N] f32.
 
     Differentiable in x (weights are wire-format constants). The backward
     pass decodes once and uses a plain matmul — serving never needs it,
-    QAT examples do.
+    QAT examples do. ``block = (bm, bn, bk)`` overrides the
+    weight-stationary kernel's tile sizes (autotuning hook); ``None`` uses
+    the MXU-shaped defaults, with ``bm`` clamped to the padded M so small
+    serving batches don't round up to a full 128-row tile.
     """
-    return _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret)
+    return _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret,
+                                  block)
 
 
-def _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret):
+def _qmm_blocks(m0: int, block: tuple | None) -> tuple:
+    if block is not None:
+        return block
+    bm = min(takum_matmul.DEFAULT_BM, max(8, -(-m0 // 8) * 8))
+    return (bm, takum_matmul.DEFAULT_BN, takum_matmul.DEFAULT_BK)
+
+
+def _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret, block):
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
@@ -106,10 +118,9 @@ def _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret):
         out = kref.qmatmul_ref(x2, w_words, n)
         return out.reshape(*lead, w_words.shape[-1])
     interpret_ = interpret_default() if interpret is None else interpret
-    bm, bn, bk = (takum_matmul.DEFAULT_BM, takum_matmul.DEFAULT_BN,
-                  takum_matmul.DEFAULT_BK)
     m0, k0 = x2.shape
     n0 = w_words.shape[-1]
+    bm, bn, bk = _qmm_blocks(m0, block)
     xp = _pad_to(x2, bm, bk)
     wp = _pad_to(w_words, bk, bn)  # zero words decode to 0.0: exact padding
     out = takum_matmul.qmatmul_kernel_call(xp, wp, n, bm=bm, bn=bn, bk=bk,
@@ -117,12 +128,12 @@ def _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret):
     return out[:m0, :n0].reshape(*lead, n0)
 
 
-def _qmm_fwd(x, w_words, n, use_kernel, interpret):
-    return _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret), (
-        x, w_words)
+def _qmm_fwd(x, w_words, n, use_kernel, interpret, block):
+    return _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret,
+                                  block), (x, w_words)
 
 
-def _qmm_bwd(n, use_kernel, interpret, res, g):
+def _qmm_bwd(n, use_kernel, interpret, block, res, g):
     x, w_words = res
     w = kref.decode_ref(w_words, n)
     gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
@@ -130,3 +141,59 @@ def _qmm_bwd(n, use_kernel, interpret, res, g):
 
 
 quant_matmul.defvjp(_qmm_fwd, _qmm_bwd)
+
+
+@jax.tree_util.register_pytree_node_class
+class WireMatrix:
+    """A 2D weight in takum wire format, decoded on use.
+
+    Drop-in for a float ``[K, N]`` matrix at ``x @ w`` sites: jax defers
+    the matmul to :meth:`__rmatmul__`, which routes through
+    ``quant_matmul`` (the weight-stationary decode-once kernel on TPU, the
+    fused XLA decode+dot elsewhere). This is how ``serve.engine
+    .quantize_weights(..., mode="wire")`` swaps a served model onto
+    n/32-size HBM weights without touching the model code.
+    """
+
+    def __init__(self, words, n: int, *, block: tuple | None = None):
+        self.words = words
+        self.n = n
+        self.block = block
+
+    @classmethod
+    def encode(cls, w, n: int, *, block: tuple | None = None):
+        from repro.core import takum as takum_mod
+        return cls(takum_mod.float_to_takum(jnp.asarray(w, jnp.float32), n),
+                   n, block=block)
+
+    # pytree: words are the leaf; width/block are static
+    def tree_flatten(self):
+        return (self.words,), (self.n, self.block)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0], block=aux[1])
+
+    @property
+    def shape(self):
+        return self.words.shape
+
+    @property
+    def ndim(self):
+        return self.words.ndim
+
+    @property
+    def dtype(self):  # decode target dtype, for callers probing params
+        return jnp.float32
+
+    def decode(self, dtype=jnp.float32):
+        return kref.decode_ref(self.words, self.n, dtype=dtype)
+
+    def __rmatmul__(self, x):
+        out = quant_matmul(x, self.words, self.n,
+                           not interpret_default(), None, self.block)
+        return out.astype(x.dtype)
+
+    def __repr__(self):
+        return (f"WireMatrix(shape={tuple(self.words.shape)}, "
+                f"n={self.n})")

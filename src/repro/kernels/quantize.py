@@ -2,7 +2,11 @@
 
 Used by quantisation-aware training: the round trip through the takum
 grid happens tile-by-tile without materialising the word tensor in HBM —
-one HBM read + one HBM write instead of three.
+one HBM read + one HBM write instead of three. The round trip is pure
+integer dataflow (encode bit-disassembly -> decode IEEE bit-assembly,
+see core/takum.py): two bitcasts bracket an all-integer tile body, which
+keeps this kernel bit-identical to ``ref.fake_quant_ref`` and cheap on
+the VPU.
 """
 
 from __future__ import annotations

@@ -4,6 +4,13 @@ Each kernel in ``takum_codec.py`` / ``quantize.py`` / ``takum_matmul.py``
 must match its oracle here bit-exactly (codec) or to accumulation
 tolerance (matmul) across the shape/dtype sweeps in
 ``tests/test_kernels.py``.
+
+These oracles call the *same* integer-only reconstruction as the kernels
+(``takum.takum_to_float`` / ``float_to_takum``), so kernel, fallback and
+reference paths are bit-identical by construction; the retained
+ldexp-dataflow reference lives separately as
+``takum.takum_to_float_ref`` and is pinned against the integer path in
+``tests/test_int_reconstruct.py``.
 """
 
 from __future__ import annotations

@@ -14,6 +14,14 @@ The takum advantage ported from the paper: all header math happens in a
 fixed 12-bit window independent of n, so the kernel's op count is
 constant in n — unlike a posit kernel whose CLZ/shift chains widen with n
 (see benchmarks/fig2_decoder_area.py).
+
+Both kernels are **integer-only end to end**: ``takum.takum_to_float``
+assembles IEEE words directly (shifts + one bitcast — no ldexp / float
+divide), and ``takum.float_to_takum`` disassembles them the same way, so
+the tile body never touches the VPU's float pipes except for the final
+bitcast. Kernel, jnp fallback (kernels/ref.py) and the fused fake-quant
+kernel all call the same codec functions and therefore stay bit-identical
+by construction.
 """
 
 from __future__ import annotations

@@ -5,14 +5,35 @@ arithmetic unit. Weights are stored in HBM as takum8/takum16 words
 (2-4x less HBM traffic than f32/bf16); each (bk, bn) weight tile is
 decoded to f32 *in VMEM* and immediately consumed by the MXU matmul.
 
-Memory-roofline effect (serving decode shapes are weight-bandwidth-bound):
-HBM bytes per weight drop from 4 (f32) / 2 (bf16) to n/8, while the MXU
-work is unchanged — the decode is VPU-side and overlaps the MXU under the
-usual Mosaic pipelining.
+Weight-stationary schedule
+--------------------------
+Grid: ``(N/bn, K/bk, M/bm)`` with **M innermost** — the transpose of the
+classic M-outer schedule. For each ``(j, kk)`` the weight tile is decoded
+**exactly once**, into a VMEM scratch buffer, under
+``pl.when(pl.program_id(2) == 0)``; all M steps then reuse the decoded
+tile straight from VMEM. The old M-outer grid re-ran the decode ``M/bm``
+times per tile, paying the VPU cost (and defeating the codec's fixed
+12-bit-window advantage) on every revisit. The decode itself is the
+integer-only reconstruction of ``core/takum.py`` — shifts + one bitcast,
+no ldexp/divide — so the VPU work that remains overlaps the MXU under
+Mosaic pipelining (``dimension_semantics``: N parallel, K/M arbitrary).
 
-Grid: (M/bm, N/bn, K/bk) with K innermost; the f32 output tile is
-initialised at k == 0 and accumulated across K steps (standard
-multiple-visit accumulation).
+Accumulation: the output block is the full ``(M, bn)`` stripe of the
+current ``j`` (``index_map = (0, j)``), so its block index is constant
+across every ``(kk, i)`` step of a ``j`` — all revisits are consecutive,
+which is exactly the residency Pallas TPU guarantees, and the stripe is
+DMA'd to HBM once per ``j`` (no per-step output write amplification;
+with per-``(i, j)`` output blocks the M-innermost order would flush a
+block on every inner step, ~+50% HBM traffic at serving shapes). Each
+step accumulates its ``bm``-row slice in place. The stripe costs
+``M * bn * 4`` bytes of VMEM; calls whose stripe would exceed
+``acc_budget_bytes`` (default 4 MiB, i.e. M > ~8k rows at bn = 128)
+fall back to the classic M-outer/K-innermost schedule, where consecutive
+K steps accumulate directly in a ``(bm, bn)`` output block (one decode
+per ``(i, j, kk)`` — correct, just not decode-once).
+
+Block sizes ``(bm, bn, bk)`` are caller-tunable through
+``ops.quant_matmul`` for autotuning; defaults match the MXU tile.
 """
 
 from __future__ import annotations
@@ -22,15 +43,47 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import takum
 
-__all__ = ["qmatmul_kernel_call"]
+__all__ = ["qmatmul_kernel_call", "DEFAULT_ACC_BUDGET"]
 
 DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 128, 128, 128
+DEFAULT_ACC_BUDGET = 4 * 1024 * 1024  # VMEM bytes for the (M, bn) stripe
 
 
-def _qmm_tile(x_ref, w_ref, o_ref, *, n: int):
+def _qmm_ws_tile(x_ref, w_ref, o_ref, wdec_ref, *, n: int, bm: int):
+    """One (j, kk, i) step: decode-once weight tile, stripe accumulate."""
+    kk = pl.program_id(1)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _decode():  # once per (j, kk): all M steps reuse wdec_ref
+        wdec_ref[...] = takum.takum_to_float(w_ref[...], n,
+                                             dtype=jnp.float32)
+
+    part = jnp.dot(
+        x_ref[...].astype(jnp.float32), wdec_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+    # o_ref is the whole (M, bn) stripe of column j: constant block index
+    # across all (kk, i) of a j, so the buffer stays resident and is
+    # written back once per j
+    rows = pl.ds(pl.multiple_of(i * bm, bm), bm)
+
+    @pl.when(kk == 0)
+    def _set():
+        o_ref[rows, :] = part
+
+    @pl.when(kk != 0)
+    def _acc():
+        o_ref[rows, :] += part
+
+
+def _qmm_tile_moutermost(x_ref, w_ref, o_ref, *, n: int):
+    """Classic (i, j, kk) K-innermost schedule: consecutive-visit output
+    accumulation, one decode per grid step (big-M fallback)."""
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
@@ -43,9 +96,11 @@ def _qmm_tile(x_ref, w_ref, o_ref, *, n: int):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n", "bm", "bn", "bk", "interpret"))
+                   static_argnames=("n", "bm", "bn", "bk", "interpret",
+                                    "acc_budget_bytes"))
 def qmatmul_kernel_call(x, w_words, n: int, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
-                        bk=DEFAULT_BK, interpret: bool = False):
+                        bk=DEFAULT_BK, interpret: bool = False,
+                        acc_budget_bytes: int = DEFAULT_ACC_BUDGET):
     """x [M, K] float  @  decode(w_words [K, N])  -> f32 [M, N].
 
     M % bm == K % bk == N % bn == 0 (ops.py pads; zero words decode to 0.0,
@@ -54,9 +109,32 @@ def qmatmul_kernel_call(x, w_words, n: int, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
     m, k = x.shape
     k2, nn = w_words.shape
     assert k == k2
-    grid = (m // bm, nn // bn, k // bk)
+    kwargs = {}
+    if m * bn * 4 <= acc_budget_bytes:
+        grid = (nn // bn, k // bk, m // bm)  # (j, kk, i): M innermost
+        if not interpret:
+            kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary"))
+        return pl.pallas_call(
+            functools.partial(_qmm_ws_tile, n=n, bm=bm),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda j, kk, i: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda j, kk, i: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((m, bn), lambda j, kk, i: (0, j)),
+            out_shape=jax.ShapeDtypeStruct((m, nn), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+            interpret=interpret,
+            **kwargs,
+        )(x, w_words)
+
+    grid = (m // bm, nn // bn, k // bk)  # fallback: (i, j, kk), K innermost
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
     return pl.pallas_call(
-        functools.partial(_qmm_tile, n=n),
+        functools.partial(_qmm_tile_moutermost, n=n),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),

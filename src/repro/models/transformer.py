@@ -37,11 +37,21 @@ def cast_params(params, dtype):
       quantisation, DESIGN.md §3): decoded here, at the consumer — HBM and
       any FSDP gathers along the way carry n/32 of the f32 bytes. This is
       the codec-as-matmul-input-stage integration on the XLA path (the
-      Pallas kernel fuses the same decode into the matmul tile loop).
+      Pallas kernel fuses the same decode into the matmul tile loop);
+    * ``WireMatrix`` nodes (serve.engine ``mode="wire"``) pass through
+      untouched: their words must *stay* words so each ``x @ w`` site
+      routes through the decode-once weight-stationary matmul instead of
+      an eager whole-tensor decode.
     """
     from repro.core import takum as _takum
+    from repro.kernels.ops import WireMatrix
+
+    def is_wire(p):
+        return isinstance(p, WireMatrix)
 
     def cast(p):
+        if is_wire(p):
+            return p
         if hasattr(p, "dtype"):
             if p.dtype in (jnp.uint8, jnp.uint16):
                 n = jnp.iinfo(p.dtype).bits
@@ -49,7 +59,7 @@ def cast_params(params, dtype):
             if jnp.issubdtype(p.dtype, jnp.floating):
                 return p.astype(dtype)
         return p
-    return jax.tree_util.tree_map(cast, params)
+    return jax.tree_util.tree_map(cast, params, is_leaf=is_wire)
 
 
 # ---------------------------------------------------------------------------

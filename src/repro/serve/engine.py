@@ -25,21 +25,51 @@ __all__ = ["ServeEngine", "quantize_weights"]
 
 
 def quantize_weights(params, fmt: str = "takum8", *,
+                     mode: str = "fake",
                      skip_substrings=("embed", "unembed", "scale", "norm")):
-    """Replace float weight matrices by (words, n) wire tuples — decoded on
-    use by quant_matmul — OR (default here) fake-quantise in place so the
-    whole model runs unchanged. In-place fake-quant is what serving
-    accuracy evaluations use; the fused decode-matmul kernel path is
-    exercised separately in kernels/ and benchmarks/."""
+    """Quantise a served model's weight matrices to takum.
+
+    ``mode="fake"`` (default): quantise-dequantise in place; the model
+    runs unchanged on float weights rounded to the takum grid — what
+    serving accuracy evaluations use.
+
+    ``mode="wire"``: replace dense projections by a
+    :class:`repro.kernels.ops.WireMatrix` holding the raw takum words.
+    HBM weight bytes drop to n/32 of f32, and every ``x @ w`` site routes
+    through the weight-stationary decode-once matmul kernel (fused XLA
+    decode+dot off-TPU) via jax's operator deferral — no model-code
+    changes. Layer-stacked (L, din, dout) projections are wired too:
+    ``lax.scan`` slices the registered pytree's word leaf per layer, so
+    each block sees a 2D WireMatrix. Wire weights are unscaled (takum's
+    sqrt(e)^±255 range needs no scale side-channel). Only leaves on the
+    ``wire_leaves`` allowlist below are wired — every name on it is
+    consumed via a plain ``x @ w`` across all model families (attention
+    and MLP projections, rwkv mixer/gate matrices); anything else —
+    einsum'd matrices (MoE ``experts_*`` stacks), lora factors, skipped
+    names, unknown new projections — falls back to in-place fake-quant,
+    trading the wire saving for guaranteed compatibility.
+    """
     from repro.core import quant as q
+    from repro.kernels import ops as kops
+    if mode not in ("fake", "wire"):
+        raise ValueError(f"unknown quantize_weights mode {mode!r}")
     n = int(fmt.replace("takum", ""))
     spec = q.QuantSpec(fmt="takum", n=n, scale="per_tensor")
+    # exact leaf names applied via `x @ w` (matmul defers to WireMatrix);
+    # other matrices go through einsum sites that need real arrays
+    wire_leaves = {"wq", "wk", "wv", "wo", "wg", "wr", "w1", "w2"}
 
     def visit(path, leaf):
-        name = "/".join(str(p) for p in path)
-        if leaf.ndim >= 2 and not any(s in name for s in skip_substrings):
-            return q.dequantize(q.quantize(leaf, spec)).astype(leaf.dtype)
-        return leaf
+        parts = [str(getattr(p, "key", p)).strip("'[]") for p in path]
+        name = "/".join(parts)
+        if leaf.ndim < 2 or any(s in name for s in skip_substrings):
+            return leaf
+        wireable = (jnp.issubdtype(leaf.dtype, jnp.floating)
+                    and parts and parts[-1] in wire_leaves
+                    and leaf.ndim in (2, 3))
+        if mode == "wire" and wireable:
+            return kops.WireMatrix.encode(leaf, n)
+        return q.dequantize(q.quantize(leaf, spec)).astype(leaf.dtype)
 
     return jax.tree_util.tree_map_with_path(visit, params)
 

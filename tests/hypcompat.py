@@ -1,0 +1,81 @@
+"""``hypothesis`` compatibility shim for offline environments.
+
+``from hypcompat import given, settings, st`` is a drop-in for the
+hypothesis imports used in this test suite. When hypothesis is installed
+it is re-exported unchanged; when it is missing, a minimal deterministic
+fallback runs each property test on ``max_examples`` seeded draws from the
+tiny strategy subset these tests use (``integers``, ``sampled_from``,
+``tuples``, ``lists``). No shrinking, no database — just coverage, so
+tier-1 collection never depends on a pip install.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(
+                lambda rng: tuple(s.example(rng) for s in strats))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(
+                lambda rng: [elem.example(rng)
+                             for _ in range(rng.randint(min_size, max_size))])
+
+    st = _St()
+
+    def settings(*, max_examples: int = 20, **_ignored):
+        # @settings sits *above* @given: it annotates the given-wrapper.
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strats):
+        import inspect
+
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in strats.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # present only the non-strategy params (pytest fixtures) in the
+            # signature, like hypothesis does; no __wrapped__, so pytest's
+            # fixture resolution sees exactly this signature.
+            sig = inspect.signature(fn)
+            keep = [p for name, p in sig.parameters.items()
+                    if name not in strats]
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -5,7 +5,7 @@ checkpoint roundtrips over arbitrary pytrees, pipeline determinism."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core import takum
 from repro.core.quant import QuantSpec, dequantize, quantize

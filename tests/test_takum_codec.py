@@ -7,7 +7,7 @@ from fractions import Fraction
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core import golden, takum
 from repro.core.takum import frac_width
