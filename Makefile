@@ -3,11 +3,11 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: check test kernel-parity bench bench-json dist-selftest
+.PHONY: check test kernel-parity docs bench bench-json dist-selftest
 
-# tier-1 tests + interpret-mode kernel parity (the kernel parity suites
-# are part of tier-1; they are also runnable standalone below)
-check: test kernel-parity
+# tier-1 tests + interpret-mode kernel parity + doc-snippet smoke (the
+# kernel parity suites are part of tier-1; also runnable standalone below)
+check: test kernel-parity docs
 
 test:
 	$(PY) -m pytest -x -q
@@ -15,7 +15,13 @@ test:
 # interpret-mode Pallas kernels vs jnp oracles only (fast inner loop
 # while iterating on kernels)
 kernel-parity:
-	$(PY) -m pytest -q tests/test_kernels.py tests/test_int_reconstruct.py
+	$(PY) -m pytest -q tests/test_kernels.py tests/test_int_reconstruct.py \
+		tests/test_lns_kernel.py
+
+# execute the fenced python snippets in the documentation (doctest-style
+# smoke: the docs cannot drift from the code silently)
+docs:
+	$(PY) tools/check_docs.py README.md docs/*.md
 
 bench:
 	$(PY) -m benchmarks.run

@@ -6,7 +6,12 @@ Tracks the perf trajectory of the two hot paths this repo optimises:
   GB/s) for n in {8, 16} — the integer-only reconstruction path;
 * weight-only-quantised matmul at a serving decode shape (small M, big
   weights), reported as effective weight GB/s (weight wire bytes / wall
-  time — the roofline quantity serving cares about).
+  time — the roofline quantity serving cares about);
+* the same serving shape on the LNS ℓ̄ datapath (``lns_qmatmul`` rows):
+  logarithmic-takum wire weights through ``ops.lns_matmul`` with the
+  linear-domain accumulator, activations quantised to the LNS grid per
+  call (rel_err therefore includes activation quantisation, unlike the
+  weight-only ``qmatmul`` rows).
 
 On non-TPU hosts the qmatmul numbers use the XLA fallback path
 (``use_kernel=False``) — the Pallas interpreter is a correctness tool,
@@ -61,28 +66,47 @@ def _codec_section(rng) -> dict:
     return out
 
 
-def _qmatmul_section(rng, use_kernel: bool) -> dict:
+def _qmatmul_rows(rng, *, encode_fn, matmul_fn, fmt_prefix: str,
+                  extra_fields: dict) -> dict:
+    """Shared serving-shape matmul bench: one row per width, keyed
+    ``{fmt_prefix}{n}``, timing weight-GB/s and rel_err vs f32."""
     out: dict = {}
     x = jnp.asarray(rng.normal(size=(QMM_M, QMM_K)).astype(np.float32))
     w = (rng.normal(size=(QMM_K, QMM_N)).astype(np.float32)
          / np.sqrt(QMM_K))
     refo = np.asarray(x) @ w
     for n in WIDTHS:
-        w_words = takum.float_to_takum(w, n)
-        qmm = jax.jit(lambda a, ww, n=n: ops.quant_matmul(
-            a, ww, n, use_kernel, None))
+        w_words = encode_fn(w, n)
+        qmm = jax.jit(lambda a, ww, n=n: matmul_fn(a, ww, n))
         t = time_fn(qmm, x, w_words)
         got = np.asarray(qmm(x, w_words))
         rel = float(np.linalg.norm(got - refo) / np.linalg.norm(refo))
         wire_bytes = QMM_K * QMM_N * n // 8
-        out[f"takum{n}"] = {
+        out[f"{fmt_prefix}{n}"] = {
             "m": QMM_M, "k": QMM_K, "n": QMM_N,
+            **extra_fields,
             "us": round(t * 1e6, 2),
             "weight_gb_per_s": round(wire_bytes / t / 1e9, 4),
             "hbm_ratio_vs_f32": round(32 / n, 2),
             "rel_err": rel,
         }
     return out
+
+
+def _qmatmul_section(rng, use_kernel: bool) -> dict:
+    return _qmatmul_rows(
+        rng, encode_fn=takum.float_to_takum,
+        matmul_fn=lambda a, ww, n: ops.quant_matmul(a, ww, n, use_kernel,
+                                                    None),
+        fmt_prefix="takum", extra_fields={})
+
+
+def _lns_qmatmul_section(rng, use_kernel: bool) -> dict:
+    return _qmatmul_rows(
+        rng, encode_fn=takum.float_to_lns_takum,
+        matmul_fn=lambda a, ww, n: ops.lns_matmul(a, ww, n, "linear",
+                                                  use_kernel, None),
+        fmt_prefix="lns-takum", extra_fields={"accum": "linear"})
 
 
 def run(print_fn=print, out_path: str = OUT_PATH) -> dict:
@@ -97,6 +121,7 @@ def run(print_fn=print, out_path: str = OUT_PATH) -> dict:
                         else "xla_fused_decode_dot",
         **_codec_section(rng),
         "qmatmul": _qmatmul_section(rng, use_kernel),
+        "lns_qmatmul": _lns_qmatmul_section(rng, use_kernel),
     }
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=1)
@@ -106,6 +131,9 @@ def run(print_fn=print, out_path: str = OUT_PATH) -> dict:
                               f"wire_gb_per_s={row['wire_gb_per_s']}"))
     for fmt, row in doc["qmatmul"].items():
         print_fn(csv_line(f"codec_json/qmatmul/{fmt}", row["us"],
+                          f"weight_gb_per_s={row['weight_gb_per_s']}"))
+    for fmt, row in doc["lns_qmatmul"].items():
+        print_fn(csv_line(f"codec_json/lns_qmatmul/{fmt}", row["us"],
                           f"weight_gb_per_s={row['weight_gb_per_s']}"))
     print_fn(f"# wrote {out_path}")
     return doc

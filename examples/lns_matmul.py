@@ -1,7 +1,9 @@
 """Logarithmic-takum arithmetic demo (the paper's Section III internal
 representation in action): exact LNS multiply/divide/sqrt as fixed-point
-adds/shifts on ell_bar, Gauss-log addition, and an LNS-multiply /
-linear-accumulate matmul.
+adds/shifts on ell_bar, Gauss-log addition, an LNS-multiply /
+linear-accumulate matmul, and the fused Pallas kernel that serves the
+same datapath (``ops.lns_matmul``) with both accumulators plus the
+``lns-takum`` wire format for served weights.
 
     PYTHONPATH=src python examples/lns_matmul.py
 """
@@ -10,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lns, takum
+from repro.kernels import ops
 
 
 def main():
@@ -44,6 +47,22 @@ def main():
     print("\n(Multiplies in the barred-ell_bar domain are exact integer "
           "adds — the Section III representation never needs a two's-"
           "complement negation around the codec.)")
+
+    # the same datapath as a fused Pallas kernel: LNS wire weights in
+    # HBM, decode-once weight-stationary tiles, per-call accumulator
+    ww = takum.float_to_lns_takum(w, n)
+    for accum in ("linear", "gauss"):
+        out_k = ops.lns_matmul(jnp.asarray(x), ww, n, accum, True, None,
+                               (8, 8, 8))
+        rel = (np.linalg.norm(np.asarray(out_k) - ref) /
+               np.linalg.norm(ref))
+        print(f"ops.lns_matmul accum={accum!r:9}: rel err {rel:.4f}")
+
+    # serving route: a WireMatrix defers x @ w onto the LNS kernel
+    wm = ops.WireMatrix.encode(w, n, fmt="lns")
+    rel = (np.linalg.norm(np.asarray(jnp.asarray(x) @ wm) - ref) /
+           np.linalg.norm(ref))
+    print(f"x @ WireMatrix(fmt='lns')    : rel err {rel:.4f}  ({wm})")
 
 
 if __name__ == "__main__":

@@ -20,12 +20,14 @@ from __future__ import annotations
 from typing import NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import takum
 from repro.core.takum import frac_width
 
 __all__ = ["LnsTensor", "from_words", "to_words", "mul", "div", "sqrt",
-           "add", "lns_matmul"]
+           "add", "lns_matmul", "gauss_tables", "gauss_add_parts",
+           "GAUSS_LUT_SIZE", "GAUSS_STEP_LOG2"]
 
 _ELL_MAX_INT = 255  # |ell_bar| < 255 by construction
 
@@ -113,6 +115,98 @@ def add(a: LnsTensor, b: LnsTensor, *, wf: int) -> LnsTensor:
     is_zero = (a.is_zero & b.is_zero) | (exact_cancel & ~a.is_zero & ~b.is_zero)
     is_nar = a.is_nar | b.is_nar
     return _rebar(s, ell, is_zero & ~is_nar, is_nar, wf)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point Gauss-log addition (LUT form, shared with the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+GAUSS_STEP_LOG2 = -6   # LUT step in ell units: 2^-6 per entry
+GAUSS_LUT_SIZE = 1024  # covers d in (-(SIZE-1) * 2^STEP_LOG2, 0] ~ (-16, 0]
+
+
+def gauss_tables(wf: int, *, size: int = GAUSS_LUT_SIZE,
+                 step_log2: int = GAUSS_STEP_LOG2):
+    """Quantised Gauss-log tables, the software stand-in for the hardware
+    LUT + interpolator: row 0 is ``phi_add(d) = 2 ln(1 + e^(d/2))``, row 1
+    ``phi_sub(d) = 2 ln(1 - e^(d/2))``, sampled at ``d = -i * 2^step_log2``
+    and rounded to the ``wf``-fraction-bit fixed-point grid (int32).
+
+    ``phi_sub`` diverges to -inf at d = 0; entries are floored at
+    ``-2 * 255`` so a near-cancellation fold saturates to the smallest
+    takum magnitude instead of overflowing the lane. Exact cancellation
+    (d == 0, opposite signs) is handled out-of-table by
+    :func:`gauss_add_parts`.
+
+    Returns an int32 array of shape ``(2, size)`` — small enough
+    (8 KiB at the default size) to sit in VMEM for the whole kernel.
+    ``wf <= 18`` keeps the floored entries (and the interpolation
+    arithmetic of :func:`gauss_add_parts`) inside int32.
+    """
+    if wf > 18:
+        raise ValueError(f"gauss tables overflow int32 lanes for wf={wf} "
+                         "(need wf <= 18, i.e. n <= 23)")
+    d = -np.arange(size, dtype=np.float64) * 2.0 ** step_log2
+    ed = np.exp(d * 0.5)
+    phi_add = 2.0 * np.log1p(ed)
+    with np.errstate(divide="ignore"):
+        phi_sub = 2.0 * np.log(np.maximum(1.0 - ed, 1e-300))
+    phi_sub = np.maximum(phi_sub, -2.0 * _ELL_MAX_INT)
+    tab = np.stack([phi_add, phi_sub])
+    return jnp.asarray(np.round(tab * (1 << wf)).astype(np.int32))
+
+
+def gauss_add_parts(s_a, ell_a, zero_a, s_b, ell_b, zero_b, lut, *,
+                    wf: int, step_log2: int = GAUSS_STEP_LOG2):
+    """One Gauss-log fold on the tile-friendly ``(s, ell, zero)`` int lanes
+    (see :func:`repro.core.takum.decode_lns_parts`; ``ell`` is un-barred,
+    signed, ``wf`` fraction bits; ``zero`` is 0/1 int32).
+
+    Pure integer dataflow: compare/select to order the operands, one LUT
+    gather + linear interpolation for ``phi``, one add, one clip. ``lut``
+    is a ``gauss_tables(wf)`` array. Accuracy: LUT interpolation error
+    (negligible at the default grid) + one ``2^-(wf+1)`` re-quantisation
+    per fold; near-cancellation folds (opposite signs, ``|d|`` below one
+    LUT step) saturate to the table floor without interpolating — the
+    standard LNS limitation the paper's §III scope shares, and it also
+    keeps the interpolation product ``rem * (hi - lo)`` inside int32
+    (outside that saturated first segment adjacent entries differ by
+    < 2^(wf+1), so the product is < 2^(2*wf - 5); the ``wf <= 18`` bound
+    enforced by :func:`gauss_tables` covers it).
+    """
+    step_shift = wf + step_log2
+    if step_shift < 0:
+        raise ValueError(f"wf={wf} finer than the LUT step")
+    size = lut.shape[-1]
+    a_ge = ell_a >= ell_b
+    base_s = jnp.where(a_ge, s_a, s_b)
+    other_s = jnp.where(a_ge, s_b, s_a)
+    base = jnp.maximum(ell_a, ell_b)
+    nd = base - jnp.minimum(ell_a, ell_b)  # -d >= 0, in 2^-wf ulps
+    same = base_s == other_s
+    idx = jnp.minimum(nd >> step_shift, size - 2)
+    in_range = nd < ((size - 1) << step_shift)
+    rem = nd - (idx << step_shift)
+    flat = jnp.where(same, 0, size) + idx
+    lo = jnp.take(lut.reshape(-1), flat)
+    hi = jnp.take(lut.reshape(-1), flat + 1)
+    # the phi_sub(0) entry is the saturation floor: do not interpolate
+    # across it (the true curve dives to -inf there, and the huge hi-lo
+    # would overflow the int32 interpolation product)
+    slope = jnp.where(~same & (idx == 0), 0, hi - lo)
+    phi = lo + ((rem * slope) >> step_shift)
+    # beyond the table the correction is below one ulp: result = base
+    phi = jnp.where(in_range, phi, 0)
+    lim = _ELL_MAX_INT << wf
+    ell = jnp.clip(base + phi, -lim, lim)
+    cancel = ~same & (nd == 0)
+    ell = jnp.where(zero_a == 1, ell_b, jnp.where(zero_b == 1, ell_a, ell))
+    s = jnp.where(zero_a == 1, s_b, jnp.where(zero_b == 1, s_a, base_s))
+    zero = jnp.where(
+        (zero_a == 1) & (zero_b == 1), 1,
+        jnp.where((zero_a == 1) | (zero_b == 1), 0,
+                  cancel.astype(jnp.int32)))
+    return s, ell, zero
 
 
 def lns_matmul(x_words, w_words, n: int, *, accum_dtype=jnp.float32):

@@ -70,6 +70,7 @@ __all__ = [
     "decode_linear",
     "encode_linear",
     "decode_lns",
+    "decode_lns_parts",
     "encode_lns",
     "takum_to_float",
     "takum_to_float_ref",
@@ -451,6 +452,32 @@ def decode_lns(words, n: int, *, hw_path: bool = False) -> LnsDecoded:
     ell = (dec.val.astype(sdt) << jnp.asarray(wf, sdt)) | dec.mant.astype(sdt)
     return LnsDecoded(s=dec.s, ell_bar=ell, is_zero=dec.is_zero,
                       is_nar=dec.is_nar)
+
+
+def decode_lns_parts(words, n: int, *, hw_path: bool = False):
+    """Tile-friendly integer LNS decode: two int32 lanes per element.
+
+    Returns ``(ell, flags)`` where ``ell`` is the **un-barred** logarithmic
+    value ``ell = (-1)^S ell_bar`` as a signed int32 fixed-point number with
+    ``frac_width(n)`` fraction bits, and ``flags`` packs the special cases:
+    bit 0 = S, bit 1 = is_zero, bit 2 = is_nar.
+
+    This is the form the Pallas LNS matmul kernels keep in VMEM scratch:
+    the product of two takum-LNS values is one int32 add of their ``ell``
+    lanes (exact — the Section III story at tile granularity) and the sign
+    is one XOR of the flag lanes. Requires ``n <= 27`` so that the 9-bit
+    characteristic plus ``frac_width(n)`` fraction bits (plus one carry
+    bit for a product) fit an int32 lane.
+    """
+    if n > 27:
+        raise ValueError("decode_lns_parts needs ell + carry in int32 "
+                         f"lanes: n <= 27, got {n}")
+    dec = decode_lns(words, n, hw_path=hw_path)
+    ell = jnp.where(dec.s == 1, -dec.ell_bar, dec.ell_bar).astype(jnp.int32)
+    flags = (dec.s.astype(jnp.int32)
+             | (dec.is_zero.astype(jnp.int32) << 1)
+             | (dec.is_nar.astype(jnp.int32) << 2))
+    return ell, flags
 
 
 def encode_lns(s, ell_bar, n: int, *, wf: int, sticky=None,

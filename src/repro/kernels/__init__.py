@@ -1,3 +1,27 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer: the paper's codec at tile granularity.
+
+Modules: ``takum_codec`` (decode/encode tiles), ``quantize`` (fused
+fake-quant), ``takum_matmul`` (weight-stationary linear-takum matmul),
+``lns_matmul`` (the ℓ̄-datapath LNS matmul), ``ref`` (pure-jnp oracles),
+``ops`` (public jit'd wrappers — re-exported here).
+"""
+
+from repro.kernels.ops import (
+    WireMatrix,
+    fake_quant_fused,
+    interpret_default,
+    lns_matmul,
+    quant_matmul,
+    takum_decode,
+    takum_encode,
+)
+
+__all__ = [
+    "WireMatrix",
+    "fake_quant_fused",
+    "interpret_default",
+    "lns_matmul",
+    "quant_matmul",
+    "takum_decode",
+    "takum_encode",
+]

@@ -17,10 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref as kref
+from repro.kernels import lns_matmul as klns
 from repro.kernels import takum_codec, takum_matmul, quantize as kquant
 
 __all__ = ["takum_decode", "takum_encode", "fake_quant_fused", "quant_matmul",
-           "interpret_default", "WireMatrix"]
+           "lns_matmul", "interpret_default", "WireMatrix"]
 
 
 def interpret_default() -> bool:
@@ -45,6 +46,21 @@ def _unpad2d(y, shape, size):
 def takum_decode(words, n: int, *, use_kernel: bool = True,
                  block=takum_codec.DEFAULT_BLOCK, dtype=jnp.float32,
                  interpret: bool | None = None):
+    """Decode n-bit linear takum words to float, any input shape.
+
+    ``words`` must be an unsigned array holding n-bit words (the
+    ``word_dtype(n)`` convention; zero word -> 0.0, NaR -> NaN). The
+    input is flattened, padded to ``block`` multiples for the Pallas
+    grid, and the padding is stripped from the result, so arbitrary
+    shapes round-trip exactly. ``dtype`` is the decode target (f32
+    default; f64 needs x64; other float dtypes compute in f32 and cast).
+
+    ``use_kernel=False`` bypasses Pallas entirely and lowers the same
+    integer reconstruction through plain XLA (bit-identical by
+    construction — used by dry-runs that must not depend on Mosaic).
+    ``interpret=None`` auto-selects: real Mosaic lowering on TPU,
+    Pallas interpreter elsewhere; pass ``True``/``False`` to force.
+    """
     if not use_kernel:
         return kref.decode_ref(words, n, dtype=dtype)
     interpret = interpret_default() if interpret is None else interpret
@@ -57,6 +73,15 @@ def takum_decode(words, n: int, *, use_kernel: bool = True,
 def takum_encode(x, n: int, *, use_kernel: bool = True,
                  block=takum_codec.DEFAULT_BLOCK,
                  interpret: bool | None = None):
+    """Encode floats to n-bit linear takum words (RNE, saturating), any
+    input shape.
+
+    Input is cast to f32 first (the codec's dtype contract), flattened
+    and padded to ``block`` multiples, and returned in ``word_dtype(n)``
+    with the original shape. Finite nonzero values never round to the
+    0/NaR words (§V-A saturation); NaN -> NaR, ±inf -> largest-magnitude
+    takum. ``use_kernel``/``interpret`` as in :func:`takum_decode`.
+    """
     if not use_kernel:
         return kref.encode_ref(x, n)
     interpret = interpret_default() if interpret is None else interpret
@@ -68,13 +93,30 @@ def takum_encode(x, n: int, *, use_kernel: bool = True,
 
 def fake_quant_fused(x, n: int, *, use_kernel: bool = True,
                      block=kquant.DEFAULT_BLOCK, dtype=jnp.float32,
-                     interpret: bool | None = None):
+                     interpret: bool | None = None, fmt: str = "linear"):
+    """Fused quantise-dequantise through the n-bit takum grid without
+    materialising the word tensor in HBM (one read + one write per tile).
+
+    ``fmt="linear"`` rounds through the linear takum grid (pure-integer
+    tile body, bit-identical to ``encode`` + ``decode``); ``fmt="lns"``
+    rounds through the *logarithmic* grid — RNE in ell_bar space, the
+    LNS format's native rounding domain. Input is cast to f32; output is
+    ``dtype`` with the input's shape (padding stripped as in
+    :func:`takum_decode`). No scaling is applied — scaling lives a level
+    up in ``core.quant``. ``use_kernel``/``interpret`` as in
+    :func:`takum_decode`.
+    """
+    if fmt not in ("linear", "lns"):
+        raise ValueError(f"unknown fake-quant fmt {fmt!r}")
     if not use_kernel:
+        if fmt == "lns":
+            return kref.fake_quant_lns_ref(x, n, dtype=dtype)
         return kref.fake_quant_ref(x, n, dtype=dtype)
     interpret = interpret_default() if interpret is None else interpret
     x2, shape, size = _pad2d_for(jnp.asarray(x, jnp.float32), block)
     y = kquant.fake_quant_kernel_call(x2, n, block=block,
-                                      interpret=interpret, dtype=dtype)
+                                      interpret=interpret, dtype=dtype,
+                                      fmt=fmt)
     return _unpad2d(y, shape, size)
 
 
@@ -92,12 +134,22 @@ def quant_matmul(x, w_words, n: int, use_kernel: bool = True,
                  block: tuple | None = None):
     """x [..., K] @ decode(w_words [K, N]) -> [..., N] f32.
 
-    Differentiable in x (weights are wire-format constants). The backward
-    pass decodes once and uses a plain matmul — serving never needs it,
-    QAT examples do. ``block = (bm, bn, bk)`` overrides the
-    weight-stationary kernel's tile sizes (autotuning hook); ``None`` uses
-    the MXU-shaped defaults, with ``bm`` clamped to the padded M so small
-    serving batches don't round up to a full 128-row tile.
+    The weight-only-quantised matmul: ``w_words`` are *linear* takum wire
+    words (``word_dtype(n)``), decoded tile-by-tile in VMEM on the way
+    into the MXU; ``x`` is any float dtype (computed in f32) with
+    arbitrary leading dims, flattened to rows. Rows/cols are padded to
+    the block grid and unpadded on return — zero words decode to 0.0, so
+    K/N padding is exact. Differentiable in x (weights are wire-format
+    constants; the VJP decodes once and uses a plain matmul — serving
+    never needs it, QAT examples do).
+
+    ``use_kernel=False`` lowers to a fused XLA decode+dot instead of
+    Pallas (used off-TPU and by dry-runs). ``interpret=None``
+    auto-selects Mosaic on TPU / the Pallas interpreter elsewhere.
+    ``block = (bm, bn, bk)`` overrides the weight-stationary kernel's
+    tile sizes (autotuning hook); ``None`` uses the MXU-shaped defaults,
+    with ``bm`` clamped to the padded M so small serving batches don't
+    round up to a full 128-row tile.
     """
     return _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret,
                                   block)
@@ -110,22 +162,43 @@ def _qmm_blocks(m0: int, block: tuple | None) -> tuple:
     return (bm, takum_matmul.DEFAULT_BN, takum_matmul.DEFAULT_BK)
 
 
-def _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret, block):
+def _matmul_fwd_common(x, w_words, n, use_kernel, interpret, block, *,
+                       ref_fn, prep_fn, kernel_fn):
+    """Shared shape plumbing for the quantised-matmul wrappers: flatten
+    leading dims, pad to the block grid (zero words decode to 0.0 /
+    is_zero, so padding is exact), dispatch kernel vs XLA fallback,
+    unpad and restore the leading dims."""
     lead = x.shape[:-1]
-    k = x.shape[-1]
-    x2 = x.reshape(-1, k)
-    if not use_kernel:
-        out = kref.qmatmul_ref(x2, w_words, n)
-        return out.reshape(*lead, w_words.shape[-1])
-    interpret_ = interpret_default() if interpret is None else interpret
-    m0, k0 = x2.shape
+    x2 = x.reshape(-1, x.shape[-1])
     n0 = w_words.shape[-1]
+    if not use_kernel:
+        return ref_fn(x2, w_words, n).reshape(*lead, n0)
+    interpret_ = interpret_default() if interpret is None else interpret
+    m0 = x2.shape[0]
     bm, bn, bk = _qmm_blocks(m0, block)
-    xp = _pad_to(x2, bm, bk)
-    wp = _pad_to(w_words, bk, bn)  # zero words decode to 0.0: exact padding
-    out = takum_matmul.qmatmul_kernel_call(xp, wp, n, bm=bm, bn=bn, bk=bk,
-                                           interpret=interpret_)
+    xp = _pad_to(prep_fn(x2), bm, bk)
+    wp = _pad_to(w_words, bk, bn)
+    out = kernel_fn(xp, wp, bm, bn, bk, interpret_)
     return out[:m0, :n0].reshape(*lead, n0)
+
+
+def _matmul_bwd_common(n, res, g, *, decode_fn):
+    """Shared VJP: weights are wire-format constants, so the only
+    cotangent is ``g @ decode(w)^T`` (STE through any input rounding)."""
+    x, w_words = res
+    w = decode_fn(w_words, n)
+    gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
+    return gx, None
+
+
+def _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret, block):
+    return _matmul_fwd_common(
+        x, w_words, n, use_kernel, interpret, block,
+        ref_fn=kref.qmatmul_ref,
+        prep_fn=lambda x2: x2,
+        kernel_fn=lambda xp, wp, bm, bn, bk, itp:
+            takum_matmul.qmatmul_kernel_call(xp, wp, n, bm=bm, bn=bn,
+                                             bk=bk, interpret=itp))
 
 
 def _qmm_fwd(x, w_words, n, use_kernel, interpret, block):
@@ -134,13 +207,72 @@ def _qmm_fwd(x, w_words, n, use_kernel, interpret, block):
 
 
 def _qmm_bwd(n, use_kernel, interpret, block, res, g):
-    x, w_words = res
-    w = kref.decode_ref(w_words, n)
-    gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
-    return gx, None
+    return _matmul_bwd_common(n, res, g, decode_fn=kref.decode_ref)
 
 
 quant_matmul.defvjp(_qmm_fwd, _qmm_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def lns_matmul(x, w_words, n: int, accum: str = "linear",
+               use_kernel: bool = True, interpret: bool | None = None,
+               block: tuple | None = None):
+    """x [..., K] ⊗ decode(w_words [K, N]) -> [..., N] f32 on the LNS
+    datapath.
+
+    ``w_words`` are *logarithmic* takum wire words
+    (``float_to_lns_takum``); ``x`` is float and is quantised to the same
+    LNS grid on the way in (the LNS-DNN design point: both operands live
+    in ell_bar space so every product is one exact int32 add — see
+    ``kernels/lns_matmul.py``). ``accum="linear"`` converts each product
+    to f32 and accumulates linearly, matching the ``core.lns.lns_matmul``
+    reference bit-exactly for K = 1 and to f32 summation-order tolerance
+    otherwise; ``accum="gauss"`` folds products in the log domain through
+    the Gauss-log LUT and leaves it once per output element (adds one
+    ``2^-(wf+1)`` re-quantisation per fold). Padding, ``use_kernel``,
+    ``interpret`` and ``block`` behave as in :func:`quant_matmul`
+    (``use_kernel=False`` is the fused XLA decode+dot fallback, one extra
+    f32 rounding per product — it is inherently linear-accumulating, so
+    ``accum="gauss"`` with ``use_kernel=False`` raises rather than
+    silently returning the wrong accumulator; the kernel path runs on any
+    backend via the interpreter). Differentiable in x with a straight-
+    through estimate through the activation quantisation: the VJP is
+    ``g @ decode(w)^T``.
+    """
+    return _lns_matmul_fwd_impl(x, w_words, n, accum, use_kernel,
+                                interpret, block)
+
+
+def _lns_matmul_fwd_impl(x, w_words, n, accum, use_kernel, interpret, block):
+    # guard here, not in the public wrapper: custom_vjp routes grad calls
+    # straight to the fwd rule, which must refuse just the same
+    if accum == "gauss" and not use_kernel:
+        raise ValueError(
+            "accum='gauss' needs the kernel path: the XLA fallback is a "
+            "fused decode+dot and cannot Gauss-accumulate; pass "
+            "use_kernel=True (interpret mode runs on any backend)")
+    from repro.core import takum as takum_mod
+    return _matmul_fwd_common(
+        x, w_words, n, use_kernel, interpret, block,
+        ref_fn=kref.lns_qmatmul_ref,
+        # activations join the weights on the LNS grid before tiling
+        prep_fn=lambda x2: takum_mod.float_to_lns_takum(
+            x2.astype(jnp.float32), n),
+        kernel_fn=lambda xp, wp, bm, bn, bk, itp:
+            klns.lns_matmul_kernel_call(xp, wp, n, accum=accum, bm=bm,
+                                        bn=bn, bk=bk, interpret=itp))
+
+
+def _lmm_fwd(x, w_words, n, accum, use_kernel, interpret, block):
+    return _lns_matmul_fwd_impl(x, w_words, n, accum, use_kernel,
+                                interpret, block), (x, w_words)
+
+
+def _lmm_bwd(n, accum, use_kernel, interpret, block, res, g):
+    return _matmul_bwd_common(n, res, g, decode_fn=kref.lns_decode_ref)
+
+
+lns_matmul.defvjp(_lmm_fwd, _lmm_bwd)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -149,30 +281,41 @@ class WireMatrix:
 
     Drop-in for a float ``[K, N]`` matrix at ``x @ w`` sites: jax defers
     the matmul to :meth:`__rmatmul__`, which routes through
-    ``quant_matmul`` (the weight-stationary decode-once kernel on TPU, the
-    fused XLA decode+dot elsewhere). This is how ``serve.engine
-    .quantize_weights(..., mode="wire")`` swaps a served model onto
-    n/32-size HBM weights without touching the model code.
+    ``quant_matmul`` (``fmt="linear"``, the weight-stationary decode-once
+    kernel on TPU, the fused XLA decode+dot elsewhere) or
+    :func:`lns_matmul` (``fmt="lns"``, the ℓ̄-datapath kernel — the wire
+    words are logarithmic takums and activations are quantised to the
+    same grid per call). This is how ``serve.engine.quantize_weights(...,
+    mode="wire")`` swaps a served model onto n/32-size HBM weights
+    without touching the model code.
     """
 
-    def __init__(self, words, n: int, *, block: tuple | None = None):
+    def __init__(self, words, n: int, *, block: tuple | None = None,
+                 fmt: str = "linear"):
+        if fmt not in ("linear", "lns"):
+            raise ValueError(f"unknown wire fmt {fmt!r}")
         self.words = words
         self.n = n
         self.block = block
+        self.fmt = fmt
 
     @classmethod
-    def encode(cls, w, n: int, *, block: tuple | None = None):
+    def encode(cls, w, n: int, *, block: tuple | None = None,
+               fmt: str = "linear"):
         from repro.core import takum as takum_mod
-        return cls(takum_mod.float_to_takum(jnp.asarray(w, jnp.float32), n),
-                   n, block=block)
+        enc = (takum_mod.float_to_lns_takum if fmt == "lns"
+               else takum_mod.float_to_takum)
+        return cls(enc(jnp.asarray(w, jnp.float32), n), n, block=block,
+                   fmt=fmt)
 
-    # pytree: words are the leaf; width/block are static
+    # pytree: words are the leaf; width/block/fmt are static
     def tree_flatten(self):
-        return (self.words,), (self.n, self.block)
+        return (self.words,), (self.n, self.block, self.fmt)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], aux[0], block=aux[1])
+        fmt = aux[2] if len(aux) > 2 else "linear"
+        return cls(children[0], aux[0], block=aux[1], fmt=fmt)
 
     @property
     def shape(self):
@@ -187,13 +330,19 @@ class WireMatrix:
         return jnp.float32
 
     def decode(self, dtype=jnp.float32):
+        if self.fmt == "lns":
+            return kref.lns_decode_ref(self.words, self.n, dtype=dtype)
         return kref.decode_ref(self.words, self.n, dtype=dtype)
 
     def __rmatmul__(self, x):
-        out = quant_matmul(x, self.words, self.n,
-                           not interpret_default(), None, self.block)
+        if self.fmt == "lns":
+            out = lns_matmul(x, self.words, self.n, "linear",
+                             not interpret_default(), None, self.block)
+        else:
+            out = quant_matmul(x, self.words, self.n,
+                               not interpret_default(), None, self.block)
         return out.astype(x.dtype)
 
     def __repr__(self):
         return (f"WireMatrix(shape={tuple(self.words.shape)}, "
-                f"n={self.n})")
+                f"n={self.n}, fmt={self.fmt!r})")

@@ -24,19 +24,29 @@ __all__ = ["fake_quant_kernel_call"]
 DEFAULT_BLOCK = (256, 128)
 
 
-def _fake_quant_tile(x_ref, out_ref, *, n: int, dtype):
+def _fake_quant_tile(x_ref, out_ref, *, n: int, dtype, fmt: str):
     x = x_ref[...]
-    words = takum.float_to_takum(x, n)
-    out_ref[...] = takum.takum_to_float(words, n, dtype=dtype)
+    if fmt == "lns":
+        words = takum.float_to_lns_takum(x, n)
+        out_ref[...] = takum.lns_takum_to_float(words, n, dtype=dtype)
+    else:
+        words = takum.float_to_takum(x, n)
+        out_ref[...] = takum.takum_to_float(words, n, dtype=dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "block", "interpret", "dtype"))
+@functools.partial(jax.jit, static_argnames=("n", "block", "interpret",
+                                             "dtype", "fmt"))
 def fake_quant_kernel_call(x, n: int, *, block=DEFAULT_BLOCK,
-                           interpret: bool = False, dtype=jnp.float32):
+                           interpret: bool = False, dtype=jnp.float32,
+                           fmt: str = "linear"):
+    """fmt="linear": round trip through the linear takum grid (integer-only
+    tile body). fmt="lns": round trip through the logarithmic grid — the
+    tile body pays one log and one exp (the LNS grid's native rounding
+    domain is ell_bar, so encode/decode must cross the transcendental)."""
     r, c = x.shape
     grid = (r // block[0], c // block[1])
     return pl.pallas_call(
-        functools.partial(_fake_quant_tile, n=n, dtype=dtype),
+        functools.partial(_fake_quant_tile, n=n, dtype=dtype, fmt=fmt),
         grid=grid,
         in_specs=[pl.BlockSpec(block, lambda i, j: (i, j))],
         out_specs=pl.BlockSpec(block, lambda i, j: (i, j)),

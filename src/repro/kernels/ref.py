@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 from repro.core import takum
 
-__all__ = ["decode_ref", "encode_ref", "fake_quant_ref", "qmatmul_ref"]
+__all__ = ["decode_ref", "encode_ref", "fake_quant_ref", "qmatmul_ref",
+           "lns_decode_ref", "fake_quant_lns_ref", "lns_qmatmul_ref"]
 
 
 def decode_ref(words, n: int, dtype=jnp.float32):
@@ -45,4 +46,33 @@ def qmatmul_ref(x, w_words, n: int, out_dtype=jnp.float32):
     """
     w = takum.takum_to_float(w_words, n, dtype=jnp.float32)
     return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def lns_decode_ref(words, n: int, dtype=jnp.float32):
+    """takum-LNS words -> float (tau of Definition 1 on representation (10))."""
+    return takum.lns_takum_to_float(words, n, dtype=dtype)
+
+
+def fake_quant_lns_ref(x, n: int, dtype=jnp.float32):
+    """Fused quantise-dequantise on the *logarithmic* takum grid."""
+    return takum.lns_takum_to_float(
+        takum.float_to_lns_takum(jnp.asarray(x, jnp.float32), n), n,
+        dtype=dtype)
+
+
+def lns_qmatmul_ref(x, w_words, n: int, out_dtype=jnp.float32):
+    """XLA fallback for the LNS matmul: activations quantised to the LNS
+    grid, both sides decoded to f32, one fused dot.
+
+    Versus the Pallas kernel (which adds the int32 ``ell`` lanes and
+    exponentiates the *sum*), each product here carries one extra f32
+    multiply rounding — bounded by half an ulp per product, far below the
+    n <= 16 quantisation noise. The demo-scale exact-ℓ̄ reference is
+    ``core.lns.lns_matmul``.
+    """
+    xq = takum.lns_takum_to_float(
+        takum.float_to_lns_takum(jnp.asarray(x, jnp.float32), n), n)
+    w = takum.lns_takum_to_float(w_words, n)
+    return jnp.dot(xq, w,
                    preferred_element_type=jnp.float32).astype(out_dtype)

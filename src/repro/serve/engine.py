@@ -12,6 +12,7 @@ between compiled steps).
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import List, Optional
 
 import jax
@@ -28,6 +29,14 @@ def quantize_weights(params, fmt: str = "takum8", *,
                      mode: str = "fake",
                      skip_substrings=("embed", "unembed", "scale", "norm")):
     """Quantise a served model's weight matrices to takum.
+
+    ``fmt`` selects grid and width: ``"takum8"``/``"takum16"`` are the
+    *linear* wire formats; ``"lns-takum8"``/``"lns-takum16"`` the
+    *logarithmic* ones — wire leaves then route every ``x @ w`` through
+    the ℓ̄-datapath kernel (``ops.lns_matmul``), which also quantises the
+    incoming activations to the LNS grid (the LNS-DNN design point), and
+    fake-quantised leaves round-trip through the LNS grid unscaled
+    (takum's sqrt(e)^±255 range needs no scale side-channel).
 
     ``mode="fake"`` (default): quantise-dequantise in place; the model
     runs unchanged on float weights rounded to the takum grid — what
@@ -50,10 +59,16 @@ def quantize_weights(params, fmt: str = "takum8", *,
     trading the wire saving for guaranteed compatibility.
     """
     from repro.core import quant as q
+    from repro.core import takum as tk
     from repro.kernels import ops as kops
     if mode not in ("fake", "wire"):
         raise ValueError(f"unknown quantize_weights mode {mode!r}")
-    n = int(fmt.replace("takum", ""))
+    m = re.fullmatch(r"(lns-)?takum(\d+)", fmt)
+    if m is None:
+        raise ValueError(f"unknown quantize_weights fmt {fmt!r} "
+                         "(expected 'takum<n>' or 'lns-takum<n>')")
+    lns_fmt = m.group(1) is not None
+    n = int(m.group(2))
     spec = q.QuantSpec(fmt="takum", n=n, scale="per_tensor")
     # exact leaf names applied via `x @ w` (matmul defers to WireMatrix);
     # other matrices go through einsum sites that need real arrays
@@ -68,7 +83,12 @@ def quantize_weights(params, fmt: str = "takum8", *,
                     and parts and parts[-1] in wire_leaves
                     and leaf.ndim in (2, 3))
         if mode == "wire" and wireable:
-            return kops.WireMatrix.encode(leaf, n)
+            return kops.WireMatrix.encode(
+                leaf, n, fmt="lns" if lns_fmt else "linear")
+        if lns_fmt:  # LNS grid round trip, unscaled (range needs no scale)
+            return tk.lns_takum_to_float(
+                tk.float_to_lns_takum(leaf.astype(jnp.float32), n),
+                n).astype(leaf.dtype)
         return q.dequantize(q.quantize(leaf, spec)).astype(leaf.dtype)
 
     return jax.tree_util.tree_map_with_path(visit, params)

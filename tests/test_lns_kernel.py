@@ -1,0 +1,232 @@
+"""Pallas LNS matmul (ℓ̄ datapath) pinned against the pure-jnp reference
+``core.lns.lns_matmul``, plus the LNS wire format end to end.
+
+Tolerance contract (documented in docs/kernels.md):
+
+* ``accum="linear"``: products are exact fixed-point adds in ℓ̄ in both
+  implementations, so results differ only by f32 summation order —
+  bit-exact for K = 1 (mul-only, accumulation-free), tight rtol else.
+* ``accum="gauss"``: one LUT-interpolated fold per product, each adding
+  up to one ``2^-(wf+1)`` re-quantisation — tolerance scales with
+  ``K * 2^-wf``.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import lns, takum
+from repro.kernels import ops, ref
+from repro.kernels.lns_matmul import lns_matmul_kernel_call
+
+WIDTHS = [8, 16]
+# two block configs: square tiles, and rectangular tiles that tile M/K/N
+# unevenly so the padding paths run too
+BLOCKS = [(8, 8, 8), (8, 16, 8)]
+LINEAR_RTOL = {8: 2e-5, 16: 2e-5}
+GAUSS_RTOL = {8: 0.1, 16: 0.02}
+
+
+def _words(x, n):
+    return takum.float_to_lns_takum(np.asarray(x, np.float32), n)
+
+
+def _ref(x, w_words, n):
+    return np.asarray(lns.lns_matmul(_words(x, n), w_words, n))
+
+
+@pytest.mark.parametrize("n", WIDTHS)
+@pytest.mark.parametrize("block", BLOCKS)
+def test_lns_matmul_linear_matches_reference(n, block):
+    rng = np.random.default_rng(10 + n)
+    x = rng.normal(size=(12, 24)).astype(np.float32)
+    w = (rng.normal(size=(24, 20)).astype(np.float32) / 5.0)
+    ww = _words(w, n)
+    out = np.asarray(ops.lns_matmul(x, ww, n, "linear", True, True, block))
+    want = _ref(x, ww, n)
+    np.testing.assert_allclose(out, want, rtol=LINEAR_RTOL[n], atol=1e-6)
+
+
+@pytest.mark.parametrize("n", WIDTHS)
+def test_lns_matmul_mul_only_exact(n):
+    """K = 1: no accumulation — the exact-ℓ̄ product path, bit for bit."""
+    rng = np.random.default_rng(20 + n)
+    x = (rng.normal(size=(16, 1)) * np.exp(rng.normal(size=(16, 1)) * 2)
+         ).astype(np.float32)
+    w = rng.normal(size=(1, 16)).astype(np.float32)
+    ww = _words(w, n)
+    out = np.asarray(ops.lns_matmul(x, ww, n, "linear", True, True,
+                                    (8, 8, 8)))
+    want = _ref(x, ww, n)
+    np.testing.assert_array_equal(out, want)
+
+
+@pytest.mark.parametrize("n", WIDTHS)
+@pytest.mark.parametrize("block", BLOCKS)
+def test_lns_matmul_gauss_matches_reference(n, block):
+    """Gauss-log accumulation vs linear reference: same quantised
+    products, different accumulator — positive operands keep the fold
+    away from the near-cancellation region the LUT saturates."""
+    rng = np.random.default_rng(30 + n)
+    x = np.abs(rng.normal(size=(12, 24))).astype(np.float32) + 0.1
+    w = np.abs(rng.normal(size=(24, 20))).astype(np.float32) / 5.0 + 0.01
+    ww = _words(w, n)
+    out = np.asarray(ops.lns_matmul(x, ww, n, "gauss", True, True, block))
+    want = _ref(x, ww, n)
+    np.testing.assert_allclose(out, want, rtol=GAUSS_RTOL[n])
+
+
+@pytest.mark.parametrize("accum", ["linear", "gauss"])
+@pytest.mark.parametrize("n", WIDTHS)
+def test_lns_matmul_both_schedules_agree(accum, n):
+    """Weight-stationary (budget fits) vs M-outer fallback (budget 0):
+    same accumulator numerics on both grid schedules."""
+    rng = np.random.default_rng(40 + n)
+    x = np.abs(rng.normal(size=(16, 16))).astype(np.float32) + 0.1
+    w = np.abs(rng.normal(size=(16, 16))).astype(np.float32) + 0.1
+    xw, ww = _words(x, n), _words(w, n)
+    ws = np.asarray(lns_matmul_kernel_call(
+        xw, ww, n, accum=accum, bm=8, bn=8, bk=8, interpret=True))
+    mo = np.asarray(lns_matmul_kernel_call(
+        xw, ww, n, accum=accum, bm=8, bn=8, bk=8, interpret=True,
+        acc_budget_bytes=0))
+    rtol = 1e-6 if accum == "linear" else 2e-3
+    np.testing.assert_allclose(ws, mo, rtol=rtol, atol=1e-7)
+    np.testing.assert_allclose(ws, _ref(x, ww, n),
+                               rtol=max(rtol, GAUSS_RTOL[n]), atol=1e-6)
+
+
+def test_lns_matmul_batched_grad_and_fallback():
+    n = 16
+    rng = np.random.default_rng(50)
+    x = jnp.asarray(rng.normal(size=(2, 5, 48)).astype(np.float32))
+    ww = _words(rng.normal(size=(48, 24)).astype(np.float32), n)
+    out = ops.lns_matmul(x, ww, n, "linear", True, True, (8, 8, 8))
+    assert out.shape == (2, 5, 24)
+    # XLA fallback (use_kernel=False): one extra f32 rounding per product
+    out2 = ops.lns_matmul(x, ww, n, "linear", False, None)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(out),
+                               rtol=1e-5, atol=1e-5)
+    # STE VJP: g @ decode(w)^T
+    g = jax.grad(lambda v: jnp.sum(
+        ops.lns_matmul(v, ww, n, "linear", True, True, (8, 8, 8)) ** 2))(x)
+    w_dec = np.asarray(ref.lns_decode_ref(ww, n))
+    want_g = 2 * np.asarray(out) @ w_dec.T
+    np.testing.assert_allclose(np.asarray(g), want_g, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("accum", ["linear", "gauss"])
+def test_lns_matmul_nar_propagates_as_nan(accum):
+    """A NaN activation must surface as NaN on the kernel path exactly as
+    on the XLA fallback — NaR is never laundered into finite values."""
+    n = 16
+    rng = np.random.default_rng(90)
+    x = rng.normal(size=(4, 16)).astype(np.float32)
+    x[1, 3] = np.nan
+    ww = _words(np.abs(rng.normal(size=(16, 8))).astype(np.float32), n)
+    out = np.asarray(ops.lns_matmul(x, ww, n, accum, True, True, (8, 8, 8)))
+    assert np.isnan(out[1]).all()
+    assert np.isfinite(out[[0, 2, 3]]).all()
+    if accum == "linear":
+        fb = np.asarray(ops.lns_matmul(x, ww, n, accum, False, None))
+        assert np.isnan(fb[1]).all()
+    else:
+        # the XLA fallback cannot Gauss-accumulate: it must refuse, not
+        # silently return the linear accumulator — under grad too (the
+        # custom_vjp fwd rule bypasses the public wrapper)
+        with pytest.raises(ValueError, match="gauss"):
+            ops.lns_matmul(x, ww, n, accum, False, None)
+        with pytest.raises(ValueError, match="gauss"):
+            jax.grad(lambda v: ops.lns_matmul(
+                jnp.abs(v), ww, n, accum, False, None).sum())(
+                    jnp.asarray(np.abs(x[:1])))
+
+
+def test_gauss_tables_reject_overflowing_widths():
+    """wf > 18 would overflow the int32 LUT/interpolation lanes: the
+    gauss path must refuse, not corrupt."""
+    with pytest.raises(ValueError, match="wf"):
+        lns.gauss_tables(22)
+    # n = 24 routes through the same check inside the kernel call
+    with pytest.raises(ValueError, match="wf"):
+        lns_matmul_kernel_call(
+            _words(np.ones((8, 8), np.float32), 24),
+            _words(np.ones((8, 8), np.float32), 24),
+            24, accum="gauss", bm=8, bn=8, bk=8, interpret=True)
+
+
+@pytest.mark.parametrize("n", WIDTHS)
+def test_fake_quant_lns_kernel_matches_ref(n):
+    rng = np.random.default_rng(60 + n)
+    x = (rng.normal(size=(300, 129)) *
+         np.exp(rng.normal(size=(300, 129)))).astype(np.float32)
+    out = ops.fake_quant_fused(x, n, interpret=True, fmt="lns")
+    want = ref.fake_quant_lns_ref(x, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_wire_matrix_lns_roundtrip_through_quantize_weights():
+    """WireMatrix(fmt="lns") end to end: quantize_weights routes wq/w1/...
+    onto LNS wire words, x @ w defers through ops.lns_matmul, and the
+    pytree aux carries the format."""
+    from repro.serve.engine import quantize_weights
+    n = 16
+    rng = np.random.default_rng(70)
+    w = rng.normal(size=(32, 16)).astype(np.float32)
+    params = {"blk": {"wq": jnp.asarray(w),
+                      "norm_scale": jnp.ones((16,)),
+                      "experts_mix": jnp.asarray(w)}}
+    qp = quantize_weights(params, "lns-takum16", mode="wire")
+    wm = qp["blk"]["wq"]
+    assert isinstance(wm, ops.WireMatrix) and wm.fmt == "lns" and wm.n == n
+    # non-wireable leaf fell back to LNS fake-quant, skipped name untouched
+    assert not isinstance(qp["blk"]["experts_mix"], ops.WireMatrix)
+    np.testing.assert_array_equal(np.asarray(qp["blk"]["norm_scale"]),
+                                  np.ones((16,), np.float32))
+
+    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    out = np.asarray(x @ wm)
+    want = _ref(x, wm.words, n)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+    leaves, td = jax.tree_util.tree_flatten(
+        qp, is_leaf=lambda p: isinstance(p, ops.WireMatrix))
+    back = jax.tree_util.tree_unflatten(td, leaves)
+    assert back["blk"]["wq"].fmt == "lns"
+    # decode() uses the LNS tau, not the linear reconstruction
+    dec = np.asarray(wm.decode())
+    np.testing.assert_allclose(
+        dec, np.asarray(takum.lns_takum_to_float(wm.words, n)), rtol=0)
+
+
+def test_gauss_add_parts_against_f32_gauss():
+    """The fixed-point LUT fold vs the f32 Gauss evaluation of core.lns:
+    |error| <= LUT interpolation + one requantisation."""
+    n = 16
+    wf = takum.frac_width(n)
+    rng = np.random.default_rng(80)
+    a = (rng.normal(size=256) * 2).astype(np.float32)
+    b = (rng.normal(size=256) * 2).astype(np.float32)
+    ta = lns.from_words(takum.float_to_lns_takum(a, n), n)
+    tb = lns.from_words(takum.float_to_lns_takum(b, n), n)
+    want = lns.add(ta, tb, wf=wf)
+
+    def unbar(t):
+        return jnp.where(t.s == 1, -t.ell_bar, t.ell_bar).astype(jnp.int32)
+
+    lut = lns.gauss_tables(wf)
+    s, ell, zero = lns.gauss_add_parts(
+        ta.s, unbar(ta), ta.is_zero.astype(jnp.int32),
+        tb.s, unbar(tb), tb.is_zero.astype(jnp.int32), lut, wf=wf)
+    got = np.where(np.asarray(zero) == 1, 0.0,
+                   np.asarray(1 - 2 * s) *
+                   np.exp(np.asarray(ell, np.float64) * 0.5 / (1 << wf)))
+    want_ell = jnp.where(want.s == 1, -want.ell_bar, want.ell_bar)
+    ref_f = np.where(np.asarray(want.is_zero), 0.0,
+                     np.asarray(1 - 2 * want.s) *
+                     np.exp(np.asarray(want_ell, np.float64) * 0.5 /
+                            (1 << wf)))
+    # compare where no catastrophic cancellation (|sum| not tiny)
+    ok = np.abs(a + b) > 0.05
+    np.testing.assert_allclose(got[ok], ref_f[ok], rtol=0.02, atol=1e-3)

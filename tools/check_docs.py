@@ -1,0 +1,68 @@
+"""Doc-snippet smoke runner: extract fenced ```python blocks from the
+given markdown files and execute them (``make docs``).
+
+Blocks within one file share a namespace and run top to bottom, so a doc
+can build up state across snippets like a doctest session. Snippets are
+expected to be CPU-fast (small shapes, interpret-mode kernels) — this is
+a correctness gate for the documentation, not a benchmark. A block
+fenced as ```python no-run is skipped (for illustrative fragments that
+are not self-contained).
+
+    PYTHONPATH=src python tools/check_docs.py README.md docs/*.md
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+import traceback
+
+FENCE = re.compile(r"^```python[ \t]*(no-run)?[ \t]*\n(.*?)^```[ \t]*$",
+                   re.S | re.M)
+
+
+def run_file(path: pathlib.Path) -> tuple[int, int]:
+    """Execute every runnable python block in ``path``; return
+    (blocks_run, failures)."""
+    ns: dict = {"__name__": f"docsnippet:{path.name}"}
+    ran = failed = 0
+    text = path.read_text()
+    for i, m in enumerate(FENCE.finditer(text)):
+        if m.group(1):  # no-run
+            continue
+        block = m.group(2)
+        line = text[: m.start(2)].count("\n") + 1
+        try:
+            code = compile("\n" * (line - 1) + block, str(path), "exec")
+            exec(code, ns)  # noqa: S102 - the whole point of this tool
+            ran += 1
+        except Exception:
+            failed += 1
+            print(f"FAIL {path}#block{i} (line {line}):", file=sys.stderr)
+            traceback.print_exc()
+    return ran, failed
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_docs.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    total = failures = 0
+    for arg in argv:
+        path = pathlib.Path(arg)
+        ran, failed = run_file(path)
+        total += ran
+        failures += failed
+        status = "ok" if not failed else f"{failed} FAILED"
+        print(f"{path}: {ran} snippet(s) {status}")
+    if failures:
+        return 1
+    if total == 0:
+        print("no runnable snippets found", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
