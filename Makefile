@@ -16,7 +16,7 @@ test:
 # while iterating on kernels)
 kernel-parity:
 	$(PY) -m pytest -q tests/test_kernels.py tests/test_int_reconstruct.py \
-		tests/test_lns_kernel.py
+		tests/test_lns_kernel.py tests/test_takum_attention.py
 
 # execute the fenced python snippets in the documentation (doctest-style
 # smoke: the docs cannot drift from the code silently)

@@ -11,12 +11,19 @@ Tracks the perf trajectory of the two hot paths this repo optimises:
   logarithmic-takum wire weights through ``ops.lns_matmul`` with the
   linear-domain accumulator, activations quantised to the LNS grid per
   call (rel_err therefore includes activation quantisation, unlike the
-  weight-only ``qmatmul`` rows).
+  weight-only ``qmatmul`` rows);
+* decode-step attention over the wire-format KV cache
+  (``kv_attention`` rows): one-token flash decode at T in {1k, 8k},
+  takum8/16 wire caches vs the f32 cache, reporting µs and the
+  bytes-read ratio — the serving-bandwidth quantity the fused
+  ``ops.takum_attention`` kernel exists to shrink.
 
-On non-TPU hosts the qmatmul numbers use the XLA fallback path
-(``use_kernel=False``) — the Pallas interpreter is a correctness tool,
-not a performance proxy — and the JSON records which path ran so
-successive BENCH_codec.json files stay comparable.
+On non-TPU hosts the matmul/attention numbers use the XLA fallback
+paths (``use_kernel=False``) — the Pallas interpreter is a correctness
+tool, not a performance proxy. Every row records which path ran in its
+own ``path`` field (``pallas_mosaic`` / ``pallas_interpret`` /
+``xla_fallback``), replacing the schema-1 top-level ``qmatmul_path``,
+so BENCH trajectories stay comparable across backends per row.
 """
 
 from __future__ import annotations
@@ -38,6 +45,15 @@ OUT_PATH = "BENCH_codec.json"
 N_ELEMS = 1 << 21
 QMM_M, QMM_K, QMM_N = 64, 2048, 2048
 WIDTHS = (8, 16)
+KV_T = (1024, 8192)                    # decode-step context lengths
+KV_B, KV_HKV, KV_G, KV_HD = 1, 8, 4, 128
+
+
+def _path(use_kernel: bool) -> str:
+    if not use_kernel:
+        return "xla_fallback"
+    return ("pallas_mosaic" if jax.default_backend() == "tpu"
+            else "pallas_interpret")
 
 
 def _codec_section(rng) -> dict:
@@ -98,7 +114,7 @@ def _qmatmul_section(rng, use_kernel: bool) -> dict:
         rng, encode_fn=takum.float_to_takum,
         matmul_fn=lambda a, ww, n: ops.quant_matmul(a, ww, n, use_kernel,
                                                     None),
-        fmt_prefix="takum", extra_fields={})
+        fmt_prefix="takum", extra_fields={"path": _path(use_kernel)})
 
 
 def _lns_qmatmul_section(rng, use_kernel: bool) -> dict:
@@ -106,22 +122,68 @@ def _lns_qmatmul_section(rng, use_kernel: bool) -> dict:
         rng, encode_fn=takum.float_to_lns_takum,
         matmul_fn=lambda a, ww, n: ops.lns_matmul(a, ww, n, "linear",
                                                   use_kernel, None),
-        fmt_prefix="lns-takum", extra_fields={"accum": "linear"})
+        fmt_prefix="lns-takum",
+        extra_fields={"accum": "linear", "path": _path(use_kernel)})
+
+
+def _kv_attention_section(rng, use_kernel: bool) -> dict:
+    """Decode-step (tq = 1) attention over the KV cache at serving
+    contexts: wire-format takum8/16 caches through ``ops.takum_attention``
+    vs the f32 cache (``fmt="none"`` — same op, identity encoding).
+    ``bytes_read`` counts both K and V over the full context; the ratio
+    vs f32 is the HBM-bandwidth win the fused kernel realises."""
+    out: dict = {}
+    h = KV_HKV * KV_G
+    for t in KV_T:
+        q = jnp.asarray(
+            rng.normal(size=(KV_B, 1, h, KV_HD)).astype(np.float32))
+        kf = rng.normal(size=(KV_B, t, KV_HKV, KV_HD)).astype(np.float32)
+        vf = rng.normal(size=(KV_B, t, KV_HKV, KV_HD)).astype(np.float32)
+        ref_row = None
+        for fmt_name, (fmt, n) in {"f32": ("none", 0),
+                                   "takum8": ("linear", 8),
+                                   "takum16": ("linear", 16)}.items():
+            if fmt == "none":
+                kw, vw = jnp.asarray(kf), jnp.asarray(vf)
+                bytes_per = 4
+            else:
+                kw = takum.float_to_takum(kf, n)
+                vw = takum.float_to_takum(vf, n)
+                bytes_per = n // 8
+            attn = jax.jit(lambda a, kk, vv, n=n, fmt=fmt, t=t:
+                           ops.takum_attention(a, kk, vv, n, fmt, pos=t - 1,
+                                               use_kernel=use_kernel))
+            tt = time_fn(attn, q, kw, vw)
+            got = np.asarray(attn(q, kw, vw))
+            if ref_row is None:
+                ref_row = got
+            rel = float(np.linalg.norm(got - ref_row)
+                        / np.linalg.norm(ref_row))
+            kv_bytes = 2 * KV_B * t * KV_HKV * KV_HD * bytes_per
+            out[f"t{t}/{fmt_name}"] = {
+                "b": KV_B, "t": t, "h": h, "h_kv": KV_HKV, "hd": KV_HD,
+                "us": round(tt * 1e6, 2),
+                "kv_bytes_read": kv_bytes,
+                "bytes_read_ratio_vs_f32": round(bytes_per / 4, 4),
+                "kv_gb_per_s": round(kv_bytes / tt / 1e9, 4),
+                "rel_err": rel,
+                "path": _path(use_kernel),
+            }
+    return out
 
 
 def run(print_fn=print, out_path: str = OUT_PATH) -> dict:
     rng = np.random.default_rng(0)
     use_kernel = jax.default_backend() == "tpu"
     doc = {
-        "schema": 1,
+        "schema": 2,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": jax.default_backend(),
         "host": platform.machine(),
-        "qmatmul_path": "pallas_weight_stationary" if use_kernel
-                        else "xla_fused_decode_dot",
         **_codec_section(rng),
         "qmatmul": _qmatmul_section(rng, use_kernel),
         "lns_qmatmul": _lns_qmatmul_section(rng, use_kernel),
+        "kv_attention": _kv_attention_section(rng, use_kernel),
     }
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=1)
@@ -135,6 +197,10 @@ def run(print_fn=print, out_path: str = OUT_PATH) -> dict:
     for fmt, row in doc["lns_qmatmul"].items():
         print_fn(csv_line(f"codec_json/lns_qmatmul/{fmt}", row["us"],
                           f"weight_gb_per_s={row['weight_gb_per_s']}"))
+    for fmt, row in doc["kv_attention"].items():
+        print_fn(csv_line(
+            f"codec_json/kv_attention/{fmt}", row["us"],
+            f"bytes_read_ratio_vs_f32={row['bytes_read_ratio_vs_f32']}"))
     print_fn(f"# wrote {out_path}")
     return doc
 

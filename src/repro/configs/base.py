@@ -13,7 +13,27 @@ from typing import Callable, Dict, Optional, Tuple
 
 __all__ = ["ModelConfig", "ShapeConfig", "QuantConfig", "RuntimeConfig",
            "register_arch", "get_arch", "list_archs", "SHAPES",
-           "shape_applicable"]
+           "shape_applicable", "parse_kv_quant"]
+
+
+def parse_kv_quant(kv_quant: str) -> Tuple[str, int]:
+    """Parse a ``ModelConfig.kv_quant`` string to ``(fmt, n)``.
+
+    ``"none"`` -> ``("none", 0)`` (float cache, identity encoding);
+    ``"takum8"``/``"takum16"`` -> ``("linear", n)``;
+    ``"lns-takum8"``/``"lns-takum16"`` -> ``("lns", n)`` (logarithmic
+    cache: decode pays one exp per element instead of the integer
+    reconstruction — see docs/serving.md for when to pick it).
+    """
+    if kv_quant == "none":
+        return "none", 0
+    import re
+    m = re.fullmatch(r"(lns-)?takum(\d+)", kv_quant)
+    if m is None:
+        raise ValueError(
+            f"unknown kv_quant {kv_quant!r} (expected 'none', 'takum<n>' "
+            "or 'lns-takum<n>')")
+    return ("lns" if m.group(1) else "linear"), int(m.group(2))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,8 +71,12 @@ class ModelConfig:
     frontend: str = "none"
     dtype: str = "bf16"          # activation compute dtype
     param_dtype: str = "f32"
-    # serving: KV-cache wire format ('none' | 'takum8' | 'takum16')
+    # serving: KV-cache wire format
+    # ('none' | 'takum8' | 'takum16' | 'lns-takum8' | 'lns-takum16')
     kv_quant: str = "none"
+    # KV-sequence tile for the fused decode-attention kernel
+    # (0 -> kernel default; see kernels/takum_attention.py)
+    kv_block: int = 0
 
     @property
     def hd(self) -> int:

@@ -2,8 +2,9 @@
 
 Modules: ``takum_codec`` (decode/encode tiles), ``quantize`` (fused
 fake-quant), ``takum_matmul`` (weight-stationary linear-takum matmul),
-``lns_matmul`` (the ℓ̄-datapath LNS matmul), ``ref`` (pure-jnp oracles),
-``ops`` (public jit'd wrappers — re-exported here).
+``lns_matmul`` (the ℓ̄-datapath LNS matmul), ``takum_attention`` (fused
+flash decode-attention over the wire-format KV cache), ``ref``
+(pure-jnp oracles), ``ops`` (public jit'd wrappers — re-exported here).
 """
 
 from repro.kernels.ops import (
@@ -12,6 +13,7 @@ from repro.kernels.ops import (
     interpret_default,
     lns_matmul,
     quant_matmul,
+    takum_attention,
     takum_decode,
     takum_encode,
 )
@@ -22,6 +24,7 @@ __all__ = [
     "interpret_default",
     "lns_matmul",
     "quant_matmul",
+    "takum_attention",
     "takum_decode",
     "takum_encode",
 ]

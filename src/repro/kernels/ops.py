@@ -18,10 +18,11 @@ import numpy as np
 
 from repro.kernels import ref as kref
 from repro.kernels import lns_matmul as klns
+from repro.kernels import takum_attention as kattn
 from repro.kernels import takum_codec, takum_matmul, quantize as kquant
 
 __all__ = ["takum_decode", "takum_encode", "fake_quant_fused", "quant_matmul",
-           "lns_matmul", "interpret_default", "WireMatrix"]
+           "lns_matmul", "takum_attention", "interpret_default", "WireMatrix"]
 
 
 def interpret_default() -> bool:
@@ -273,6 +274,85 @@ def _lmm_bwd(n, accum, use_kernel, interpret, block, res, g):
 
 
 lns_matmul.defvjp(_lmm_fwd, _lmm_bwd)
+
+
+MAX_ATTN_Q_ROWS = 1024  # G*tq rows above this fall back to the oracle
+
+
+def takum_attention(q, k_cache, v_cache, n: int = 0, fmt: str = "none", *,
+                    pos, start=None, window: int = 0,
+                    use_kernel: bool | None = None,
+                    interpret: bool | None = None,
+                    block: int | None = None,
+                    max_q_rows: int = MAX_ATTN_Q_ROWS):
+    """Attention over a wire-format KV cache, decoded inside the kernel.
+
+    ``q [B, tq, H, hd]`` (any float dtype) attends over
+    ``k_cache``/``v_cache [B, Tmax, Hkv, hd]`` — raw takum words
+    (``fmt="linear"``: ``float_to_takum`` words; ``fmt="lns"``:
+    ``float_to_lns_takum`` words) or plain floats (``fmt="none"``, the
+    identity encoding: the uncompressed cache rides the same fused
+    kernel). Returns ``[B, tq, H, hd]`` f32. GQA (``H = G * Hkv``) is
+    handled by grouping the ``G`` query heads of each KV head into one
+    row block so every K/V tile is read once per KV head.
+
+    Masking: causal from ``pos`` (the position of ``q[:, 0]``; python
+    int or traced scalar), per-sequence ``start`` (``[B]`` first valid
+    key — left-padded prompts), sliding ``window`` (0 = full). Query
+    rows with ``qpos < start`` (padding queries) are garbage on every
+    path; they stay finite but the kernel and oracle average over
+    different key sets, so only rows with ``qpos >= start`` are
+    contract-comparable.
+
+    ``use_kernel``: ``True`` = the fused Pallas flash kernel (KV words
+    decoded tile-by-tile in VMEM; full-precision K/V never materialised
+    in HBM); ``False`` = the jnp oracle — exactly the decode-then-attend
+    path (whole cache decoded to f32, dense masked softmax), which is
+    what XLA fuses best off-TPU; ``None`` = kernel on TPU, oracle
+    elsewhere (the serving auto mode, mirroring ``WireMatrix``).
+    ``interpret`` as in :func:`takum_decode`. ``block`` is the KV
+    sequence tile ``bk`` (``None`` = 256, clamped/aligned to ``Tmax``;
+    ``Tmax`` is zero-word padded to a tile multiple — beyond-``pos``
+    keys are causally masked, so padding is exact). Calls with
+    ``G * tq > max_q_rows`` (prefill-shaped) fall back to the oracle:
+    the kernel's query block is VMEM-resident per (b, h) step.
+    """
+    if fmt not in ("linear", "lns", "none"):
+        raise ValueError(f"unknown KV wire fmt {fmt!r}")
+    if fmt != "none" and not n:
+        raise ValueError(f"fmt={fmt!r} needs a word width n")
+    b, tq, h, hd = q.shape
+    tmax, hkv = k_cache.shape[1], k_cache.shape[2]
+    if h % hkv:
+        raise ValueError(f"n_heads {h} not a multiple of n_kv_heads {hkv}")
+    g = h // hkv
+    if use_kernel is None:
+        use_kernel = not interpret_default()
+    if not use_kernel or g * tq > max_q_rows:
+        return kref.attention_ref(q, k_cache, v_cache, n, fmt, pos=pos,
+                                  start=start, window=window)
+    interpret = interpret_default() if interpret is None else interpret
+    rows = g * tq
+    bq = -(-rows // 8) * 8
+    # row r = (group r // tq, query position pos + r % tq)
+    q4 = q.reshape(b, tq, hkv, g, hd).transpose(0, 2, 3, 1, 4)
+    q4 = q4.reshape(b, hkv, rows, hd).astype(jnp.float32)
+    if bq != rows:
+        q4 = jnp.pad(q4, ((0, 0), (0, 0), (0, bq - rows), (0, 0)))
+    bk = min(block or kattn.DEFAULT_BK, -(-tmax // 8) * 8)
+    pad_t = -tmax % bk
+    kw, vw = k_cache, v_cache
+    if pad_t:  # zero words decode to 0.0 / is_zero and are causally masked
+        kw = jnp.pad(kw, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        vw = jnp.pad(vw, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+    start_arr = (jnp.zeros((b,), jnp.int32) if start is None
+                 else jnp.asarray(start, jnp.int32).reshape(b))
+    out4 = kattn.attention_kernel_call(q4, kw, vw, pos_arr, start_arr,
+                                       n=n, fmt=fmt, bk=bk, tq=tq,
+                                       window=window, interpret=interpret)
+    out = out4[:, :, :rows].reshape(b, hkv, g, tq, hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, tq, h, hd)
 
 
 @jax.tree_util.register_pytree_node_class

@@ -15,12 +15,14 @@ ldexp-dataflow reference lives separately as
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import takum
 
 __all__ = ["decode_ref", "encode_ref", "fake_quant_ref", "qmatmul_ref",
-           "lns_decode_ref", "fake_quant_lns_ref", "lns_qmatmul_ref"]
+           "lns_decode_ref", "fake_quant_lns_ref", "lns_qmatmul_ref",
+           "attention_ref"]
 
 
 def decode_ref(words, n: int, dtype=jnp.float32):
@@ -59,6 +61,54 @@ def fake_quant_lns_ref(x, n: int, dtype=jnp.float32):
     return takum.lns_takum_to_float(
         takum.float_to_lns_takum(jnp.asarray(x, jnp.float32), n), n,
         dtype=dtype)
+
+
+def attention_ref(q, k_cache, v_cache, n: int, fmt: str, *, pos,
+                  start=None, window: int = 0, out_dtype=jnp.float32):
+    """Decode-then-attend oracle for the fused takum attention kernel.
+
+    Exactly the pre-kernel serving path: the **whole** KV cache is
+    decoded to f32 up front (the HBM materialisation the Pallas kernel
+    exists to avoid) and dense masked attention runs over it. q is
+    ``[B, tq, H, hd]``, the caches ``[B, Tmax, Hkv, hd]`` wire words
+    (floats for ``fmt="none"``); ``pos`` is the position of ``q[:, 0]``,
+    ``start`` the per-sequence first valid key position (left padding),
+    ``window`` a sliding-window length (0 = full causal). All-masked
+    query rows (``qpos < start``) produce finite garbage — a uniform
+    average — never NaN; NaR words in *valid* positions decode to NaN
+    and poison the rows attending to them.
+    """
+    if fmt == "linear":
+        k = takum.takum_to_float(k_cache, n, dtype=jnp.float32)
+        v = takum.takum_to_float(v_cache, n, dtype=jnp.float32)
+    elif fmt == "lns":
+        k = takum.lns_takum_to_float(k_cache, n, dtype=jnp.float32)
+        v = takum.lns_takum_to_float(v_cache, n, dtype=jnp.float32)
+    elif fmt == "none":
+        # stored-dtype K/V (the pre-kernel behaviour): only scores and
+        # softmax run in f32, so a bf16 cache costs no extra traffic
+        k, v = k_cache, v_cache
+    else:
+        raise ValueError(f"unknown KV wire fmt {fmt!r}")
+    b, tq, h, hd = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    q5 = q.reshape(b, tq, hkv, g, hd)
+    if fmt != "none":
+        q5 = q5.astype(jnp.float32)
+    scores = (jnp.einsum("bqkgd,bskd->bkgqs", q5, k).astype(jnp.float32)
+              * (hd ** -0.5))
+    qi = (pos + jnp.arange(tq))[None, None, None, :, None]
+    kj = jnp.arange(tk)[None, None, None, None, :]
+    m = kj <= qi
+    if window:
+        m = m & (kj > qi - window)
+    if start is not None:
+        m = m & (kj >= jnp.asarray(start)[:, None, None, None, None])
+    scores = jnp.where(m, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, tq, h, hd).astype(out_dtype)
 
 
 def lns_qmatmul_ref(x, w_words, n: int, out_dtype=jnp.float32):

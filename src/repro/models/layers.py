@@ -194,6 +194,26 @@ def causal_mask(tq, tk, offset=0, window=0):
     return m[None, None, None, :, :]
 
 
+def _encode_kv(k, v, cache, kv_quant: str):
+    """Encode fresh k/v to the cache's wire format: (fmt, n, kw, vw)."""
+    from repro.configs.base import parse_kv_quant
+    fmt, nbits = parse_kv_quant(kv_quant)
+    if fmt == "none":
+        return fmt, 0, k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    from repro.core import takum as takum_mod
+    enc = (takum_mod.float_to_lns_takum if fmt == "lns"
+           else takum_mod.float_to_takum)
+    return fmt, nbits, enc(k.astype(jnp.float32), nbits), \
+        enc(v.astype(jnp.float32), nbits)
+
+
+# fused decode-attention dispatch (kernels/takum_attention.py): 'auto'
+# follows the backend (Pallas kernel on TPU, jnp decode-then-attend
+# fallback elsewhere); '1'/'0' force it for tests and experiments
+KV_ATTN_KERNEL = {"1": True, "0": False}.get(
+    _os.environ.get("REPRO_KV_ATTN_KERNEL", "auto"))
+
+
 def attention(params, x, cfg, positions, *, xa=None, mask=None,
               cache: Optional[Dict[str, Any]] = None, window: int = 0,
               bidirectional: bool = False, prefill_fresh: bool = False):
@@ -213,55 +233,34 @@ def attention(params, x, cfg, positions, *, xa=None, mask=None,
         # with the chunked kernel over the *current* k/v — the cache-read
         # path would materialise [Tq, Tk] scores (tens of GB at 32k)
         pos = cache["pos"]
-        if cfg.kv_quant != "none":
-            from repro.core import takum as takum_mod
-            nbits = int(cfg.kv_quant.replace("takum", ""))
-            kw = takum_mod.float_to_takum(k.astype(jnp.float32), nbits)
-            vw = takum_mod.float_to_takum(v.astype(jnp.float32), nbits)
-        else:
-            kw = k.astype(cache["k"].dtype)
-            vw = v.astype(cache["v"].dtype)
+        _, _, kw, vw = _encode_kv(k, v, cache, cfg.kv_quant)
         ck = jax.lax.dynamic_update_slice(cache["k"], kw, (0, pos, 0, 0))
         cv = jax.lax.dynamic_update_slice(cache["v"], vw, (0, pos, 0, 0))
         new_cache = {"k": ck, "v": cv, "pos": pos + x.shape[1]}
         out = _sdpa_chunked(q, k, v, window=window, causal_skip=CAUSAL_SKIP,
                             causal=True)
-        out = out.reshape(x.shape[0], x.shape[1], h * hd)
-        out = out @ params["wo"]
-        return annotate(out, "batch", "seq", "embed"), new_cache
-    if cache is not None and xa is None:
+    elif cache is not None and xa is None:
+        # decode / cached-prefill: append this step's k/v in wire format,
+        # then attend straight over the wire-format cache through
+        # ops.takum_attention — words are decoded tile-by-tile inside the
+        # fused flash kernel (or by its decode-then-attend jnp oracle
+        # off-TPU), so the full-precision [B, Tmax, Hkv, hd] K/V never
+        # exist in HBM. The uncompressed cache rides the same op with
+        # fmt="none" (identity encoding).
         pos = cache["pos"]
-        if cfg.kv_quant != "none":
-            # takum-compressed KV cache: encode on append, decode on read.
-            # The words live in HBM at n/32 of the f32 footprint — this is
-            # the paper's codec as the KV-cache wire format (DESIGN.md §3).
-            from repro.core import takum as takum_mod
-            nbits = int(cfg.kv_quant.replace("takum", ""))
-            kw = takum_mod.float_to_takum(k.astype(jnp.float32), nbits)
-            vw = takum_mod.float_to_takum(v.astype(jnp.float32), nbits)
-            ck = jax.lax.dynamic_update_slice(cache["k"], kw, (0, pos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], vw, (0, pos, 0, 0))
-            new_cache = {"k": ck, "v": cv, "pos": pos + x.shape[1]}
-            ck = takum_mod.takum_to_float(ck, nbits).astype(k.dtype)
-            cv = takum_mod.takum_to_float(cv, nbits).astype(v.dtype)
-        else:
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
-            new_cache = {"k": ck, "v": cv, "pos": pos + x.shape[1]}
-        tk = ck.shape[1]
-        kj = jnp.arange(tk)[None, None, None, None, :]
-        qi = (pos + jnp.arange(x.shape[1]))[None, None, None, :, None]
-        m = kj <= qi
-        if window:
-            m = m & (kj > qi - window)
-        if "start" in cache:
-            # left-padded prompts: positions before start[b] are padding
-            m = m & (kj >= cache["start"][:, None, None, None, None])
-            new_cache["start"] = cache["start"]
-        k, v, mask = ck.astype(k.dtype), cv.astype(v.dtype), m
-    if (cache is None and xa is None and x.shape[1] >= ATTN_CHUNK_T
+        fmt, nbits, kw, vw = _encode_kv(k, v, cache, cfg.kv_quant)
+        ck = jax.lax.dynamic_update_slice(cache["k"], kw, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vw, (0, pos, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": pos + x.shape[1]}
+        start = cache.get("start")
+        if start is not None:
+            new_cache["start"] = start
+        from repro.kernels import ops as kops
+        out = kops.takum_attention(
+            q, ck, cv, nbits, fmt, pos=pos, start=start, window=window,
+            use_kernel=KV_ATTN_KERNEL,
+            block=cfg.kv_block or None).astype(x.dtype)
+    elif (cache is None and xa is None and x.shape[1] >= ATTN_CHUNK_T
             and x.shape[1] % QC == 0 and k.shape[1] % KC == 0):
         out = _sdpa_chunked(q, k, v, window=window,
                             causal_skip=CAUSAL_SKIP,
@@ -269,8 +268,8 @@ def attention(params, x, cfg, positions, *, xa=None, mask=None,
     else:
         out = _sdpa(q, k, v, mask)
     out = out.reshape(x.shape[0], x.shape[1], h * hd)
-    out = x_out = out @ params["wo"]
-    return annotate(x_out, "batch", "seq", "embed"), new_cache
+    out = out @ params["wo"]
+    return annotate(out, "batch", "seq", "embed"), new_cache
 
 
 # ---------------------------------------------------------------------------

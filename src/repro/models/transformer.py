@@ -298,8 +298,9 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     dtype = DTYPES[cfg.dtype] if dtype is None else dtype
     kv_dtype = dtype
     if cfg.kv_quant != "none":
+        from repro.configs.base import parse_kv_quant
         from repro.core.bitops import word_dtype
-        kv_dtype = word_dtype(int(cfg.kv_quant.replace("takum", "")))
+        kv_dtype = word_dtype(parse_kv_quant(cfg.kv_quant)[1])
     caches = []
     for pat, n_rep in layer_plan(cfg):
         def one_cache():

@@ -12,22 +12,25 @@ between compiled steps).
 from __future__ import annotations
 
 import dataclasses
-import re
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, parse_kv_quant
 from repro.models import model
 
 __all__ = ["ServeEngine", "quantize_weights"]
 
 
+_DEFAULT_SKIP = ("embed", "unembed", "scale", "norm")
+
+
 def quantize_weights(params, fmt: str = "takum8", *,
                      mode: str = "fake",
-                     skip_substrings=("embed", "unembed", "scale", "norm")):
+                     skip_substrings=_DEFAULT_SKIP,
+                     verbose: bool = True):
     """Quantise a served model's weight matrices to takum.
 
     ``fmt`` selects grid and width: ``"takum8"``/``"takum16"`` are the
@@ -57,41 +60,79 @@ def quantize_weights(params, fmt: str = "takum8", *,
     einsum'd matrices (MoE ``experts_*`` stacks), lora factors, skipped
     names, unknown new projections — falls back to in-place fake-quant,
     trading the wire saving for guaranteed compatibility.
+
+    Auditability: one summary line (``n wired / n fake-quantised / n
+    skipped``) is printed unless ``verbose=False``; a
+    ``skip_substrings`` entry that matches no parameter name raises a
+    ``UserWarning`` (typo detection), and a wire-allowlist leaf whose
+    ``ndim > 3`` raises instead of silently fake-quantising.
     """
+    import warnings
+
     from repro.core import quant as q
     from repro.core import takum as tk
     from repro.kernels import ops as kops
     if mode not in ("fake", "wire"):
         raise ValueError(f"unknown quantize_weights mode {mode!r}")
-    m = re.fullmatch(r"(lns-)?takum(\d+)", fmt)
-    if m is None:
+    try:  # one format parser for weights and KV caches (configs.base)
+        kind, n = parse_kv_quant(fmt)
+    except ValueError:
+        kind = "none"
+    if kind == "none":  # 'none' is a KV setting, not a weight format
         raise ValueError(f"unknown quantize_weights fmt {fmt!r} "
                          "(expected 'takum<n>' or 'lns-takum<n>')")
-    lns_fmt = m.group(1) is not None
-    n = int(m.group(2))
+    lns_fmt = kind == "lns"
     spec = q.QuantSpec(fmt="takum", n=n, scale="per_tensor")
     # exact leaf names applied via `x @ w` (matmul defers to WireMatrix);
     # other matrices go through einsum sites that need real arrays
     wire_leaves = {"wq", "wk", "wv", "wo", "wg", "wr", "w1", "w2"}
+    counts = {"wired": 0, "fake": 0, "skipped": 0, "non_matrix": 0}
+    matched: set = set()
 
     def visit(path, leaf):
         parts = [str(getattr(p, "key", p)).strip("'[]") for p in path]
         name = "/".join(parts)
-        if leaf.ndim < 2 or any(s in name for s in skip_substrings):
+        hits = {s for s in skip_substrings if s in name}
+        matched.update(hits)
+        if hits:
+            counts["skipped"] += 1
             return leaf
-        wireable = (jnp.issubdtype(leaf.dtype, jnp.floating)
-                    and parts and parts[-1] in wire_leaves
-                    and leaf.ndim in (2, 3))
-        if mode == "wire" and wireable:
+        if leaf.ndim < 2:  # never a candidate — kept out of the skip
+            counts["non_matrix"] += 1  # count so the audit stays crisp
+            return leaf
+        named = parts and parts[-1] in wire_leaves \
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+        if mode == "wire" and named and leaf.ndim > 3:
+            raise ValueError(
+                f"quantize_weights(mode='wire'): {name!r} is on the wire "
+                f"allowlist but has ndim={leaf.ndim} > 3 — it would fall "
+                "back to fake-quant silently; reshape it or add it to "
+                "skip_substrings explicitly")
+        if mode == "wire" and named and leaf.ndim in (2, 3):
+            counts["wired"] += 1
             return kops.WireMatrix.encode(
                 leaf, n, fmt="lns" if lns_fmt else "linear")
+        counts["fake"] += 1
         if lns_fmt:  # LNS grid round trip, unscaled (range needs no scale)
             return tk.lns_takum_to_float(
                 tk.float_to_lns_takum(leaf.astype(jnp.float32), n),
                 n).astype(leaf.dtype)
         return q.dequantize(q.quantize(leaf, spec)).astype(leaf.dtype)
 
-    return jax.tree_util.tree_map_with_path(visit, params)
+    out = jax.tree_util.tree_map_with_path(visit, params)
+    # only user-supplied entries are typo-checked: the defaults are
+    # legitimately absent on some families (tied models have no
+    # 'unembed' leaf)
+    unmatched = [s for s in skip_substrings
+                 if s not in matched and s not in _DEFAULT_SKIP]
+    if unmatched:
+        warnings.warn(f"quantize_weights: skip_substrings {unmatched} "
+                      "matched no parameter name — typo?", stacklevel=2)
+    if verbose:
+        print(f"quantize_weights[{fmt}/{mode}]: {counts['wired']} wired, "
+              f"{counts['fake']} fake-quantised, {counts['skipped']} "
+              f"skipped, {counts['non_matrix']} non-matrix")
+    return out
 
 
 @dataclasses.dataclass
@@ -102,8 +143,12 @@ class ServeEngine:
     temperature: float = 0.0
     eos_id: int = -1          # -1: never stop early
     seed: int = 0
+    kv_block: Optional[int] = None  # fused-attention KV tile override
 
     def __post_init__(self):
+        parse_kv_quant(self.cfg.kv_quant)  # reject typos before compiling
+        if self.kv_block:
+            self.cfg = dataclasses.replace(self.cfg, kv_block=self.kv_block)
         cfg = self.cfg
 
         def _prefill(params, tokens, cache, media):
@@ -139,14 +184,36 @@ class ServeEngine:
         # for rwkv6/hybrid)
         use_start = cfg.family not in ("rwkv6", "hybrid_rglru") and \
             start.any()
-        cache = model.init_cache(cfg, batch=b, max_len=plen + max_new + 8,
+        max_len = plen + max_new + 8
+        from repro.kernels.ops import interpret_default
+        from repro.models.layers import KV_ATTN_KERNEL
+        if (KV_ATTN_KERNEL if KV_ATTN_KERNEL is not None
+                else not interpret_default()):
+            # fused-kernel dispatch active (any kv_quant — the float
+            # cache rides the kernel too): align the cache to the KV
+            # tile, else ops.takum_attention re-pads (copies) the whole
+            # cache every decode step. Extra slots sit beyond `pos` and
+            # are causally masked. The off-TPU oracle path needs no
+            # alignment and keeps the smaller cache.
+            from repro.kernels.takum_attention import DEFAULT_BK
+            blk = cfg.kv_block or DEFAULT_BK
+            max_len = -(-max_len // blk) * blk
+        cache = model.init_cache(cfg, batch=b, max_len=max_len,
                                  start=start if use_start else None)
         logits_last, cache = self._prefill(
             self.params, jnp.asarray(prompt), cache,
             None if media is None else jnp.asarray(media))
-        tok = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)[:, None]
-
         key = jax.random.PRNGKey(self.seed)
+        if self.temperature > 0.0:
+            # sample the first post-prefill token through the same
+            # temperature path as _step (it used to be argmax'd
+            # unconditionally, making token 0 greedy at any temperature)
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits_last / max(self.temperature, 1e-6),
+                axis=-1).astype(jnp.int32)[:, None]
+        else:
+            tok = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)[:, None]
         out = [list(p) for p in prompts]
         done = np.zeros(b, bool)
         for s in range(max_new):

@@ -1,0 +1,88 @@
+"""ServeEngine sampling semantics + quantize_weights auditability."""
+
+import dataclasses
+import re
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.models import model
+from repro.serve.engine import ServeEngine, quantize_weights
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_arch("phi3-medium-14b").reduced
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return model.init(jax.random.PRNGKey(0), cfg)
+
+
+def test_first_token_is_sampled_not_argmaxed(cfg, params):
+    """The token right after prefill must go through the same temperature
+    path as the decode loop (it used to be an unconditional argmax)."""
+    prompt = [3, 1, 4, 1, 5]
+    temp, seed = 2.0, 11
+    eng = ServeEngine(params, cfg, max_len=16, temperature=temp, seed=seed)
+    out = eng.generate([prompt], max_new=1)
+
+    cache = model.init_cache(cfg, batch=1, max_len=len(prompt) + 9)
+    logits, _ = model.prefill(params, jnp.asarray([prompt], jnp.int32), cfg,
+                              cache)
+    key = jax.random.PRNGKey(seed)
+    _, sub = jax.random.split(key)
+    want = int(jax.random.categorical(sub, logits / temp, axis=-1)[0])
+    assert out[0][-1] == want
+
+
+def test_first_token_greedy_at_zero_temperature(cfg, params):
+    prompt = [9, 2, 6]
+    eng = ServeEngine(params, cfg, max_len=16, temperature=0.0)
+    out = eng.generate([prompt], max_new=1)
+    cache = model.init_cache(cfg, batch=1, max_len=len(prompt) + 9)
+    logits, _ = model.prefill(params, jnp.asarray([prompt], jnp.int32), cfg,
+                              cache)
+    assert out[0][-1] == int(jnp.argmax(logits[0]))
+
+
+def test_engine_lns_takum_kv_cache_generates(cfg, params):
+    cfgl = dataclasses.replace(cfg, kv_quant="lns-takum16")
+    out = ServeEngine(params, cfgl, max_len=24, kv_block=16).generate(
+        [[3, 1, 4]], max_new=2)
+    assert len(out[0]) == 5
+
+
+def test_engine_rejects_kv_quant_typo(cfg, params):
+    with pytest.raises(ValueError, match="kv_quant"):
+        ServeEngine(params, dataclasses.replace(cfg, kv_quant="takun8"),
+                    max_len=8)
+
+
+def test_quantize_weights_summary_line(cfg, params, capsys):
+    quantize_weights(params, "takum16", mode="wire")
+    out = capsys.readouterr().out
+    m = re.search(r"(\d+) wired, (\d+) fake-quantised, (\d+) skipped", out)
+    assert m, out
+    assert int(m.group(1)) > 0 and int(m.group(3)) > 0
+    quantize_weights(params, "takum16", mode="fake")
+    out = capsys.readouterr().out
+    m = re.search(r"(\d+) wired, (\d+) fake-quantised, (\d+) skipped", out)
+    assert int(m.group(1)) == 0 and int(m.group(2)) > 0
+
+
+def test_quantize_weights_warns_on_unmatched_skip_substring(cfg, params):
+    with pytest.warns(UserWarning, match="matched no parameter"):
+        quantize_weights(params, "takum8", verbose=False,
+                         skip_substrings=("embed", "unembed", "scale",
+                                          "norm", "tpyo"))
+
+
+def test_quantize_weights_rejects_unwireable_allowlist_leaf():
+    bad = {"wq": jnp.zeros((2, 2, 3, 4), jnp.float32)}
+    with pytest.raises(ValueError, match="allowlist"):
+        quantize_weights(bad, "takum8", mode="wire", verbose=False)
