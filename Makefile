@@ -3,11 +3,13 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: check test kernel-parity docs bench bench-json dist-selftest
+.PHONY: check test kernel-parity docs bench bench-json bench-smoke \
+	dist-selftest
 
-# tier-1 tests + interpret-mode kernel parity + doc-snippet smoke (the
-# kernel parity suites are part of tier-1; also runnable standalone below)
-check: test kernel-parity docs
+# tier-1 tests + interpret-mode kernel parity + doc-snippet smoke + the
+# CI-sized bench schema gate (the kernel parity suites are part of
+# tier-1; all are also runnable standalone below)
+check: test kernel-parity docs bench-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -29,6 +31,11 @@ bench:
 # perf trajectory artifact only (decode/encode/qmatmul -> BENCH_codec.json)
 bench-json:
 	$(PY) -m benchmarks.run --only codec_json
+
+# CI-sized pass over every BENCH_codec row (schema + dataflow gate on
+# CPU JAX; writes BENCH_codec.smoke.json, never the real artifact)
+bench-smoke:
+	$(PY) -m benchmarks.codec_json --smoke
 
 dist-selftest:
 	$(PY) -m repro.dist.selftest

@@ -1,29 +1,40 @@
 """Machine-readable codec/qmatmul throughput -> BENCH_codec.json.
 
-Tracks the perf trajectory of the two hot paths this repo optimises:
+Tracks the perf trajectory of the hot paths this repo optimises, with
+every format drawn from the codec registry (``repro.formats``):
 
 * decode / encode / fused fake-quant throughput (elements/s and wire
-  GB/s) for n in {8, 16} — the integer-only reconstruction path;
+  GB/s) for the linear takum formats **and the posit baseline**
+  (``posit8``/``posit16``, es = 2, 2C dataflow) — the paper's
+  takum-vs-posit codec comparison as measured software throughput: the
+  takum decode is the fixed-12-bit-window integer reconstruction, the
+  posit decode pays the full-width leading-run count and shifts;
 * weight-only-quantised matmul at a serving decode shape (small M, big
-  weights), reported as effective weight GB/s (weight wire bytes / wall
-  time — the roofline quantity serving cares about);
+  weights) for takum8/16 and posit8/16 through the same decode-once
+  weight-stationary kernel, reported as effective weight GB/s (weight
+  wire bytes / wall time — the roofline quantity serving cares about);
 * the same serving shape on the LNS ℓ̄ datapath (``lns_qmatmul`` rows):
   logarithmic-takum wire weights through ``ops.lns_matmul`` with the
   linear-domain accumulator, activations quantised to the LNS grid per
   call (rel_err therefore includes activation quantisation, unlike the
   weight-only ``qmatmul`` rows);
 * decode-step attention over the wire-format KV cache
-  (``kv_attention`` rows): one-token flash decode at T in {1k, 8k},
-  takum8/16 wire caches vs the f32 cache, reporting µs and the
-  bytes-read ratio — the serving-bandwidth quantity the fused
-  ``ops.takum_attention`` kernel exists to shrink.
+  (``kv_attention`` rows): one-token flash decode at T in {1k,8k},
+  takum8/16 and posit8 wire caches vs the f32 cache (the identity
+  codec), reporting µs and the bytes-read ratio — the serving-bandwidth
+  quantity the fused ``ops.takum_attention`` kernel exists to shrink.
 
 On non-TPU hosts the matmul/attention numbers use the XLA fallback
 paths (``use_kernel=False``) — the Pallas interpreter is a correctness
 tool, not a performance proxy. Every row records which path ran in its
 own ``path`` field (``pallas_mosaic`` / ``pallas_interpret`` /
-``xla_fallback``), replacing the schema-1 top-level ``qmatmul_path``,
-so BENCH trajectories stay comparable across backends per row.
+``xla_fallback``), so BENCH trajectories stay comparable across
+backends per row.
+
+``--smoke`` (also ``run(smoke=True)``) shrinks every shape to
+CI-on-CPU size and writes ``BENCH_codec.smoke.json`` instead — a schema
+and dataflow gate (every row still exercises its real code path), not a
+measurement; CI runs it so the bench cannot silently break.
 """
 
 from __future__ import annotations
@@ -36,16 +47,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import takum
-from repro.core.bitops import word_dtype
+from repro import formats
 from repro.kernels import ops
 from benchmarks.common import csv_line, time_fn
 
 OUT_PATH = "BENCH_codec.json"
+SMOKE_OUT_PATH = "BENCH_codec.smoke.json"
 N_ELEMS = 1 << 21
 QMM_M, QMM_K, QMM_N = 64, 2048, 2048
-WIDTHS = (8, 16)
+CODEC_FORMATS = ("takum8", "takum16", "posit8", "posit16")
+QMM_FORMATS = ("takum8", "takum16", "posit8", "posit16")
+LNS_FORMATS = ("lns-takum8", "lns-takum16")
 KV_T = (1024, 8192)                    # decode-step context lengths
+KV_FORMATS = ("none", "takum8", "takum16", "posit8")
 KV_B, KV_HKV, KV_G, KV_HD = 1, 8, 4, 128
 
 
@@ -56,102 +70,96 @@ def _path(use_kernel: bool) -> str:
             else "pallas_interpret")
 
 
-def _codec_section(rng) -> dict:
+def _codec_section(rng, n_elems: int) -> dict:
     out: dict = {}
-    x = jnp.asarray(rng.normal(size=N_ELEMS).astype(np.float32) *
-                    np.exp(rng.normal(size=N_ELEMS) * 4).astype(np.float32))
-    for n in WIDTHS:
+    x = jnp.asarray(rng.normal(size=n_elems).astype(np.float32) *
+                    np.exp(rng.normal(size=n_elems) * 4).astype(np.float32))
+    for spec in map(formats.get, CODEC_FORMATS):
         words = jnp.asarray(
-            rng.integers(0, 1 << n, N_ELEMS, dtype=np.int64)
-        ).astype(word_dtype(n))
-        dec = jax.jit(lambda w, n=n: takum.takum_to_float(w, n))
-        enc = jax.jit(lambda v, n=n: takum.float_to_takum(v, n))
-        fq = jax.jit(lambda v, n=n: takum.takum_to_float(
-            takum.float_to_takum(v, n), n))
+            rng.integers(0, 1 << spec.n, n_elems, dtype=np.int64)
+        ).astype(spec.word_dtype)
+        dec = jax.jit(lambda w, s=spec: s.decode_tile(w))
+        enc = jax.jit(lambda v, s=spec: s.encode_tile(v))
+        fq = jax.jit(lambda v, s=spec: s.decode_tile(s.encode_tile(v)))
         t_dec = time_fn(dec, words)
         t_enc = time_fn(enc, x)
         t_fq = time_fn(fq, x)
         for name, t in [("decode", t_dec), ("encode", t_enc),
                         ("fake_quant", t_fq)]:
-            out.setdefault(name, {})[f"takum{n}"] = {
-                "elems": N_ELEMS,
+            out.setdefault(name, {})[spec.name] = {
+                "elems": n_elems,
                 "us": round(t * 1e6, 2),
-                "gelems_per_s": round(N_ELEMS / t / 1e9, 4),
-                "wire_gb_per_s": round(N_ELEMS * n / 8 / t / 1e9, 4),
+                "gelems_per_s": round(n_elems / t / 1e9, 4),
+                "wire_gb_per_s": round(n_elems * spec.n / 8 / t / 1e9, 4),
             }
     return out
 
 
-def _qmatmul_rows(rng, *, encode_fn, matmul_fn, fmt_prefix: str,
-                  extra_fields: dict) -> dict:
-    """Shared serving-shape matmul bench: one row per width, keyed
-    ``{fmt_prefix}{n}``, timing weight-GB/s and rel_err vs f32."""
+def _qmatmul_rows(rng, specs, *, matmul_fn, shape, extra_fields: dict) -> dict:
+    """Shared serving-shape matmul bench: one row per registry spec,
+    keyed by ``spec.name``, timing weight-GB/s and rel_err vs f32."""
     out: dict = {}
-    x = jnp.asarray(rng.normal(size=(QMM_M, QMM_K)).astype(np.float32))
-    w = (rng.normal(size=(QMM_K, QMM_N)).astype(np.float32)
-         / np.sqrt(QMM_K))
+    m, k, nn = shape
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = (rng.normal(size=(k, nn)).astype(np.float32) / np.sqrt(k))
     refo = np.asarray(x) @ w
-    for n in WIDTHS:
-        w_words = encode_fn(w, n)
-        qmm = jax.jit(lambda a, ww, n=n: matmul_fn(a, ww, n))
+    for spec in specs:
+        w_words = spec.encode_tile(w)
+        qmm = jax.jit(lambda a, ww, s=spec: matmul_fn(a, ww, s))
         t = time_fn(qmm, x, w_words)
         got = np.asarray(qmm(x, w_words))
         rel = float(np.linalg.norm(got - refo) / np.linalg.norm(refo))
-        wire_bytes = QMM_K * QMM_N * n // 8
-        out[f"{fmt_prefix}{n}"] = {
-            "m": QMM_M, "k": QMM_K, "n": QMM_N,
+        wire_bytes = k * nn * spec.bytes_per_elem()
+        out[spec.name] = {
+            "m": m, "k": k, "n": nn,
             **extra_fields,
             "us": round(t * 1e6, 2),
             "weight_gb_per_s": round(wire_bytes / t / 1e9, 4),
-            "hbm_ratio_vs_f32": round(32 / n, 2),
+            "hbm_ratio_vs_f32": round(32 / spec.n, 2),
             "rel_err": rel,
         }
     return out
 
 
-def _qmatmul_section(rng, use_kernel: bool) -> dict:
+def _qmatmul_section(rng, use_kernel: bool, shape) -> dict:
     return _qmatmul_rows(
-        rng, encode_fn=takum.float_to_takum,
-        matmul_fn=lambda a, ww, n: ops.quant_matmul(a, ww, n, use_kernel,
+        rng, map(formats.get, QMM_FORMATS),
+        matmul_fn=lambda a, ww, s: ops.quant_matmul(a, ww, s, use_kernel,
                                                     None),
-        fmt_prefix="takum", extra_fields={"path": _path(use_kernel)})
+        shape=shape, extra_fields={"path": _path(use_kernel)})
 
 
-def _lns_qmatmul_section(rng, use_kernel: bool) -> dict:
+def _lns_qmatmul_section(rng, use_kernel: bool, shape) -> dict:
     return _qmatmul_rows(
-        rng, encode_fn=takum.float_to_lns_takum,
-        matmul_fn=lambda a, ww, n: ops.lns_matmul(a, ww, n, "linear",
+        rng, map(formats.get, LNS_FORMATS),
+        matmul_fn=lambda a, ww, s: ops.lns_matmul(a, ww, s, "linear",
                                                   use_kernel, None),
-        fmt_prefix="lns-takum",
+        shape=shape,
         extra_fields={"accum": "linear", "path": _path(use_kernel)})
 
 
-def _kv_attention_section(rng, use_kernel: bool) -> dict:
+def _kv_attention_section(rng, use_kernel: bool, kv_t) -> dict:
     """Decode-step (tq = 1) attention over the KV cache at serving
-    contexts: wire-format takum8/16 caches through ``ops.takum_attention``
-    vs the f32 cache (``fmt="none"`` — same op, identity encoding).
+    contexts: wire-format caches through ``ops.takum_attention`` vs the
+    f32 cache (the identity codec — same op, same kernel).
     ``bytes_read`` counts both K and V over the full context; the ratio
     vs f32 is the HBM-bandwidth win the fused kernel realises."""
     out: dict = {}
     h = KV_HKV * KV_G
-    for t in KV_T:
+    for t in kv_t:
         q = jnp.asarray(
             rng.normal(size=(KV_B, 1, h, KV_HD)).astype(np.float32))
         kf = rng.normal(size=(KV_B, t, KV_HKV, KV_HD)).astype(np.float32)
         vf = rng.normal(size=(KV_B, t, KV_HKV, KV_HD)).astype(np.float32)
         ref_row = None
-        for fmt_name, (fmt, n) in {"f32": ("none", 0),
-                                   "takum8": ("linear", 8),
-                                   "takum16": ("linear", 16)}.items():
-            if fmt == "none":
+        for spec in map(formats.get, KV_FORMATS):
+            if spec.is_identity:
                 kw, vw = jnp.asarray(kf), jnp.asarray(vf)
-                bytes_per = 4
             else:
-                kw = takum.float_to_takum(kf, n)
-                vw = takum.float_to_takum(vf, n)
-                bytes_per = n // 8
-            attn = jax.jit(lambda a, kk, vv, n=n, fmt=fmt, t=t:
-                           ops.takum_attention(a, kk, vv, n, fmt, pos=t - 1,
+                kw, vw = spec.encode_tile(kf), spec.encode_tile(vf)
+            bytes_per = spec.bytes_per_elem(jnp.float32)
+            attn = jax.jit(lambda a, kk, vv, s=spec, t=t:
+                           ops.takum_attention(a, kk, vv, s.n, s, pos=t - 1,
                                                use_kernel=use_kernel))
             tt = time_fn(attn, q, kw, vw)
             got = np.asarray(attn(q, kw, vw))
@@ -160,7 +168,8 @@ def _kv_attention_section(rng, use_kernel: bool) -> dict:
             rel = float(np.linalg.norm(got - ref_row)
                         / np.linalg.norm(ref_row))
             kv_bytes = 2 * KV_B * t * KV_HKV * KV_HD * bytes_per
-            out[f"t{t}/{fmt_name}"] = {
+            name = "f32" if spec.is_identity else spec.name
+            out[f"t{t}/{name}"] = {
                 "b": KV_B, "t": t, "h": h, "h_kv": KV_HKV, "hd": KV_HD,
                 "us": round(tt * 1e6, 2),
                 "kv_bytes_read": kv_bytes,
@@ -172,18 +181,26 @@ def _kv_attention_section(rng, use_kernel: bool) -> dict:
     return out
 
 
-def run(print_fn=print, out_path: str = OUT_PATH) -> dict:
+def run(print_fn=print, out_path: str | None = None,
+        smoke: bool = False) -> dict:
     rng = np.random.default_rng(0)
     use_kernel = jax.default_backend() == "tpu"
+    if smoke:  # CI-on-CPU shapes: a schema/dataflow gate, not a measurement
+        n_elems, qmm_shape, kv_t = 1 << 12, (8, 128, 128), (128,)
+    else:
+        n_elems, qmm_shape, kv_t = N_ELEMS, (QMM_M, QMM_K, QMM_N), KV_T
+    if out_path is None:
+        out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
     doc = {
-        "schema": 2,
+        "schema": 3,
+        "smoke": smoke,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": jax.default_backend(),
         "host": platform.machine(),
-        **_codec_section(rng),
-        "qmatmul": _qmatmul_section(rng, use_kernel),
-        "lns_qmatmul": _lns_qmatmul_section(rng, use_kernel),
-        "kv_attention": _kv_attention_section(rng, use_kernel),
+        **_codec_section(rng, n_elems),
+        "qmatmul": _qmatmul_section(rng, use_kernel, qmm_shape),
+        "lns_qmatmul": _lns_qmatmul_section(rng, use_kernel, qmm_shape),
+        "kv_attention": _kv_attention_section(rng, use_kernel, kv_t),
     }
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=1)
@@ -206,4 +223,10 @@ def run(print_fn=print, out_path: str = OUT_PATH) -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized shapes; write BENCH_codec.smoke.json")
+    ap.add_argument("--out", default=None, help="override output path")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)

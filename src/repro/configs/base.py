@@ -17,23 +17,22 @@ __all__ = ["ModelConfig", "ShapeConfig", "QuantConfig", "RuntimeConfig",
 
 
 def parse_kv_quant(kv_quant: str) -> Tuple[str, int]:
-    """Parse a ``ModelConfig.kv_quant`` string to ``(fmt, n)``.
+    """Parse a ``ModelConfig.kv_quant`` string to ``(kind, n)``.
 
-    ``"none"`` -> ``("none", 0)`` (float cache, identity encoding);
-    ``"takum8"``/``"takum16"`` -> ``("linear", n)``;
-    ``"lns-takum8"``/``"lns-takum16"`` -> ``("lns", n)`` (logarithmic
-    cache: decode pays one exp per element instead of the integer
-    reconstruction — see docs/serving.md for when to pick it).
+    One registry lookup (``repro.formats``): ``"none"`` is the identity
+    codec (float cache), ``"takum<n>"`` the linear wire formats,
+    ``"lns-takum<n>"`` the logarithmic ones (decode pays one exp per
+    element instead of the integer reconstruction — see docs/serving.md
+    for when to pick it), ``"posit<n>"`` the posit baseline. Unknown
+    strings raise with the registered format names, so the error message
+    can never rot behind the registry.
     """
-    if kv_quant == "none":
-        return "none", 0
-    import re
-    m = re.fullmatch(r"(lns-)?takum(\d+)", kv_quant)
-    if m is None:
-        raise ValueError(
-            f"unknown kv_quant {kv_quant!r} (expected 'none', 'takum<n>' "
-            "or 'lns-takum<n>')")
-    return ("lns" if m.group(1) else "linear"), int(m.group(2))
+    from repro import formats
+    try:
+        spec = formats.resolve(kv_quant)
+    except ValueError as e:
+        raise ValueError(f"unknown kv_quant {kv_quant!r}: {e}") from None
+    return spec.kind, spec.n
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,8 +70,8 @@ class ModelConfig:
     frontend: str = "none"
     dtype: str = "bf16"          # activation compute dtype
     param_dtype: str = "f32"
-    # serving: KV-cache wire format
-    # ('none' | 'takum8' | 'takum16' | 'lns-takum8' | 'lns-takum16')
+    # serving: KV-cache wire format — any repro.formats registry name
+    # ('none' | 'takum<n>' | 'lns-takum<n>' | 'posit<n>')
     kv_quant: str = "none"
     # KV-sequence tile for the fused decode-attention kernel
     # (0 -> kernel default; see kernels/takum_attention.py)

@@ -1,0 +1,36 @@
+"""Codec registry: ``FormatSpec`` + resolution (see ``registry.py``).
+
+Usage at a consumer boundary::
+
+    from repro import formats
+    spec = formats.resolve(fmt, n)      # spec | name | (kind, n) | int
+    y = spec.decode_tile(words)         # traceable in Pallas tiles
+"""
+
+from repro.formats.registry import (
+    IDENTITY,
+    FormatSpec,
+    all_formats,
+    get,
+    names,
+    register,
+    resolve,
+    resolve_lns,
+    resolve_wire,
+    wire_formats,
+    wire_names,
+)
+
+__all__ = [
+    "IDENTITY",
+    "FormatSpec",
+    "all_formats",
+    "get",
+    "names",
+    "register",
+    "resolve",
+    "resolve_lns",
+    "resolve_wire",
+    "wire_formats",
+    "wire_names",
+]

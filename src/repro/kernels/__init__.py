@@ -1,10 +1,18 @@
 """Pallas kernel layer: the paper's codec at tile granularity.
 
+Every kernel is format-agnostic: it takes a
+:class:`repro.formats.FormatSpec` and calls its traceable
+``decode_tile``/``encode_tile``/``lns_parts`` hooks inside the tile
+body, so linear takum, logarithmic takum and the posit baseline share
+one datapath. The public ``ops`` wrappers resolve specs at the boundary
+(names, legacy kind strings, bare widths all accepted).
+
 Modules: ``takum_codec`` (decode/encode tiles), ``quantize`` (fused
-fake-quant), ``takum_matmul`` (weight-stationary linear-takum matmul),
-``lns_matmul`` (the ℓ̄-datapath LNS matmul), ``takum_attention`` (fused
-flash decode-attention over the wire-format KV cache), ``ref``
-(pure-jnp oracles), ``ops`` (public jit'd wrappers — re-exported here).
+fake-quant), ``takum_matmul`` (weight-stationary decode-once matmul for
+float-decoding formats), ``lns_matmul`` (the ℓ̄-datapath LNS matmul),
+``takum_attention`` (fused flash decode-attention over the wire-format
+KV cache), ``ref`` (pure-jnp oracles), ``ops`` (public jit'd wrappers —
+re-exported here).
 """
 
 from repro.kernels.ops import (

@@ -4,7 +4,8 @@ Completes the LNS half of the paper's codec story at kernel speed:
 weights live in HBM as takum-LNS words (§III representation (10)),
 activations are quantised to the same grid on the way in, and each
 weight tile is decoded **in VMEM** to the tile-friendly ``(ell, flags)``
-int32 lanes of :func:`repro.core.takum.decode_lns_parts` — after which a
+int32 lanes of the format's ``lns_parts`` hook (``FormatSpec`` specs
+with ``has_lns_parts``; see ``takum.decode_lns_parts``) — after which a
 *multiply* is one exact int32 add of un-barred ``ell`` lanes and one XOR
 of sign bits. No float multiplier touches the product path, which is the
 whole argument of arXiv:2404.18603 for LNS takums in multiply-heavy
@@ -67,6 +68,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import formats
 from repro.core import lns, takum
 
 __all__ = ["lns_matmul_kernel_call", "DEFAULT_ACC_BUDGET"]
@@ -138,13 +140,14 @@ def _gauss_fold(xell, xflg, well, wflg, lut, state, *, wf: int):
 
 
 def _lns_ws_linear_tile(xell_ref, xflg_ref, w_ref, o_ref, wdec_ell,
-                        wdec_flg, *, n: int, bm: int, wf: int):
+                        wdec_flg, *, spec: formats.FormatSpec, bm: int,
+                        wf: int):
     kk = pl.program_id(1)
     i = pl.program_id(2)
 
     @pl.when(i == 0)
     def _decode():  # once per (j, kk): all M steps reuse the scratch tiles
-        ell, flg = takum.decode_lns_parts(w_ref[...], n)
+        ell, flg = spec.lns_parts(w_ref[...])
         wdec_ell[...] = ell
         wdec_flg[...] = flg
 
@@ -163,13 +166,13 @@ def _lns_ws_linear_tile(xell_ref, xflg_ref, w_ref, o_ref, wdec_ell,
 
 def _lns_ws_gauss_tile(xell_ref, xflg_ref, w_ref, lut_ref, o_ref,
                        wdec_ell, wdec_flg, acc_ell, acc_flg, *,
-                       n: int, bm: int, wf: int):
+                       spec: formats.FormatSpec, bm: int, wf: int):
     kk = pl.program_id(1)
     i = pl.program_id(2)
 
     @pl.when(i == 0)
     def _decode():
-        ell, flg = takum.decode_lns_parts(w_ref[...], n)
+        ell, flg = spec.lns_parts(w_ref[...])
         wdec_ell[...] = ell
         wdec_flg[...] = flg
 
@@ -199,18 +202,19 @@ def _lns_ws_gauss_tile(xell_ref, xflg_ref, w_ref, lut_ref, o_ref,
 
 
 def _lns_mo_linear_tile(xell_ref, xflg_ref, w_ref, o_ref, *,
-                        n: int, wf: int):
+                        spec: formats.FormatSpec, wf: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    well, wflg = takum.decode_lns_parts(w_ref[...], n)
+    well, wflg = spec.lns_parts(w_ref[...])
     o_ref[...] += _linear_fold(xell_ref[...], xflg_ref[...], well, wflg,
                                wf=wf)
 
 
 def _lns_mo_gauss_tile(xell_ref, xflg_ref, w_ref, lut_ref, o_ref,
-                       acc_ell, acc_flg, *, n: int, wf: int):
+                       acc_ell, acc_flg, *, spec: formats.FormatSpec,
+                       wf: int):
     kk = pl.program_id(2)
 
     @pl.when(kk == 0)
@@ -218,7 +222,7 @@ def _lns_mo_gauss_tile(xell_ref, xflg_ref, w_ref, lut_ref, o_ref,
         acc_ell[...] = jnp.zeros_like(acc_ell[...])
         acc_flg[...] = jnp.full_like(acc_flg[...], 2)
 
-    well, wflg = takum.decode_lns_parts(w_ref[...], n)
+    well, wflg = spec.lns_parts(w_ref[...])
     flg = acc_flg[...]
     state = (flg & 1, acc_ell[...], (flg >> 1) & 1, (flg >> 2) & 1)
     s, ell, zero, nar = _gauss_fold(xell_ref[...], xflg_ref[...], well,
@@ -237,9 +241,10 @@ def _lns_mo_gauss_tile(xell_ref, xflg_ref, w_ref, lut_ref, o_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n", "accum", "bm", "bn", "bk",
+                   static_argnames=("spec", "accum", "bm", "bn", "bk",
                                     "interpret", "acc_budget_bytes"))
-def lns_matmul_kernel_call(x_words, w_words, n: int, *, accum: str = "linear",
+def lns_matmul_kernel_call(x_words, w_words, spec: formats.FormatSpec, *,
+                           accum: str = "linear",
                            bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK,
                            interpret: bool = False,
                            acc_budget_bytes: int = DEFAULT_ACC_BUDGET):
@@ -262,8 +267,8 @@ def lns_matmul_kernel_call(x_words, w_words, n: int, *, accum: str = "linear",
     m, k = x_words.shape
     k2, nn = w_words.shape
     assert k == k2
-    wf = takum.frac_width(n)
-    xell, xflg = takum.decode_lns_parts(x_words, n)
+    wf = takum.frac_width(spec.n)
+    xell, xflg = spec.lns_parts(x_words)
     lut = lns.gauss_tables(wf) if accum == "gauss" else None
     lut_spec = None if lut is None else pl.BlockSpec(
         lut.shape, lambda *_: (0,) * lut.ndim)
@@ -287,7 +292,7 @@ def lns_matmul_kernel_call(x_words, w_words, n: int, *, accum: str = "linear",
                 pltpu.VMEM((bk, bn), jnp.int32)]
         if accum == "linear":
             return pl.pallas_call(
-                functools.partial(_lns_ws_linear_tile, n=n, bm=bm, wf=wf),
+                functools.partial(_lns_ws_linear_tile, spec=spec, bm=bm, wf=wf),
                 grid=grid,
                 in_specs=[x_spec, x_spec, w_spec],
                 out_specs=o_spec,
@@ -297,7 +302,7 @@ def lns_matmul_kernel_call(x_words, w_words, n: int, *, accum: str = "linear",
                 **kwargs,
             )(xell, xflg, w_words)
         return pl.pallas_call(
-            functools.partial(_lns_ws_gauss_tile, n=n, bm=bm, wf=wf),
+            functools.partial(_lns_ws_gauss_tile, spec=spec, bm=bm, wf=wf),
             grid=grid,
             in_specs=[x_spec, x_spec, w_spec, lut_spec],
             out_specs=o_spec,
@@ -314,7 +319,7 @@ def lns_matmul_kernel_call(x_words, w_words, n: int, *, accum: str = "linear",
     o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
     if accum == "linear":
         return pl.pallas_call(
-            functools.partial(_lns_mo_linear_tile, n=n, wf=wf),
+            functools.partial(_lns_mo_linear_tile, spec=spec, wf=wf),
             grid=grid,
             in_specs=[x_spec, x_spec, w_spec],
             out_specs=o_spec,
@@ -323,7 +328,7 @@ def lns_matmul_kernel_call(x_words, w_words, n: int, *, accum: str = "linear",
             **kwargs,
         )(xell, xflg, w_words)
     return pl.pallas_call(
-        functools.partial(_lns_mo_gauss_tile, n=n, wf=wf),
+        functools.partial(_lns_mo_gauss_tile, spec=spec, wf=wf),
         grid=grid,
         in_specs=[x_spec, x_spec, w_spec, lut_spec],
         out_specs=o_spec,

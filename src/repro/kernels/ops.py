@@ -6,6 +6,15 @@ custom VJP for the quantised matmul (STE on x; weights are frozen wire
 words). The pure-jnp fallback path (``use_kernel=False``) lowers to plain
 XLA ops — used by the dry-run so that full-scale compilation does not
 depend on Mosaic availability for the host platform.
+
+Format dispatch lives in the codec registry (``repro.formats``): every
+entry point resolves its format argument **once here at the boundary** —
+callers may pass a ``FormatSpec``, a registry name (``"takum8"``,
+``"posit16"``, ``"lns-takum8"``, ``"none"``), a legacy kind string
+(``"linear"`` / ``"lns"`` / ``"posit"``) next to a width, or — the
+original API — a bare int width meaning linear takum. Below the boundary
+everything dispatches on spec attributes; no format string survives into
+the kernel layer.
 """
 
 from __future__ import annotations
@@ -14,8 +23,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro import formats
 from repro.kernels import ref as kref
 from repro.kernels import lns_matmul as klns
 from repro.kernels import takum_attention as kattn
@@ -44,80 +53,83 @@ def _unpad2d(y, shape, size):
     return y.reshape(-1)[:size].reshape(shape)
 
 
-def takum_decode(words, n: int, *, use_kernel: bool = True,
+def takum_decode(words, fmt, *, use_kernel: bool = True,
                  block=takum_codec.DEFAULT_BLOCK, dtype=jnp.float32,
                  interpret: bool | None = None):
-    """Decode n-bit linear takum words to float, any input shape.
+    """Decode wire words to float, any input shape.
 
-    ``words`` must be an unsigned array holding n-bit words (the
-    ``word_dtype(n)`` convention; zero word -> 0.0, NaR -> NaN). The
-    input is flattened, padded to ``block`` multiples for the Pallas
-    grid, and the padding is stripped from the result, so arbitrary
-    shapes round-trip exactly. ``dtype`` is the decode target (f32
-    default; f64 needs x64; other float dtypes compute in f32 and cast).
+    ``fmt`` is anything ``formats.resolve`` accepts — an int width
+    (linear takum, the original API), a registry name (``"posit16"``),
+    or a ``FormatSpec``. ``words`` must be an unsigned array holding the
+    format's n-bit words (the ``word_dtype(n)`` convention; zero word ->
+    0.0, NaR -> NaN). The input is flattened, padded to ``block``
+    multiples for the Pallas grid, and the padding is stripped from the
+    result, so arbitrary shapes round-trip exactly. ``dtype`` is the
+    decode target (f32 default; f64 needs x64; other float dtypes
+    compute in f32 and cast).
 
     ``use_kernel=False`` bypasses Pallas entirely and lowers the same
-    integer reconstruction through plain XLA (bit-identical by
-    construction — used by dry-runs that must not depend on Mosaic).
+    reconstruction through plain XLA (bit-identical by construction —
+    used by dry-runs that must not depend on Mosaic).
     ``interpret=None`` auto-selects: real Mosaic lowering on TPU,
     Pallas interpreter elsewhere; pass ``True``/``False`` to force.
     """
+    spec = formats.resolve(fmt)
     if not use_kernel:
-        return kref.decode_ref(words, n, dtype=dtype)
+        return kref.decode_ref(words, spec, dtype=dtype)
     interpret = interpret_default() if interpret is None else interpret
     w2, shape, size = _pad2d_for(words, block)
-    y = takum_codec.decode_kernel_call(w2, n, block=block,
+    y = takum_codec.decode_kernel_call(w2, spec, block=block,
                                        interpret=interpret, dtype=dtype)
     return _unpad2d(y, shape, size)
 
 
-def takum_encode(x, n: int, *, use_kernel: bool = True,
+def takum_encode(x, fmt, *, use_kernel: bool = True,
                  block=takum_codec.DEFAULT_BLOCK,
                  interpret: bool | None = None):
-    """Encode floats to n-bit linear takum words (RNE, saturating), any
-    input shape.
+    """Encode floats to wire words (RNE, saturating), any input shape.
 
     Input is cast to f32 first (the codec's dtype contract), flattened
-    and padded to ``block`` multiples, and returned in ``word_dtype(n)``
-    with the original shape. Finite nonzero values never round to the
-    0/NaR words (§V-A saturation); NaN -> NaR, ±inf -> largest-magnitude
-    takum. ``use_kernel``/``interpret`` as in :func:`takum_decode`.
+    and padded to ``block`` multiples, and returned in the format's
+    ``word_dtype`` with the original shape. Finite nonzero values never
+    round to the 0/NaR words (§V-A saturation); NaN -> NaR, ±inf ->
+    largest magnitude. ``fmt``/``use_kernel``/``interpret`` as in
+    :func:`takum_decode`.
     """
+    spec = formats.resolve_wire(fmt)
     if not use_kernel:
-        return kref.encode_ref(x, n)
+        return kref.encode_ref(x, spec)
     interpret = interpret_default() if interpret is None else interpret
     x2, shape, size = _pad2d_for(jnp.asarray(x, jnp.float32), block)
-    y = takum_codec.encode_kernel_call(x2, n, block=block,
+    y = takum_codec.encode_kernel_call(x2, spec, block=block,
                                        interpret=interpret)
     return _unpad2d(y, shape, size)
 
 
-def fake_quant_fused(x, n: int, *, use_kernel: bool = True,
+def fake_quant_fused(x, n=None, *, use_kernel: bool = True,
                      block=kquant.DEFAULT_BLOCK, dtype=jnp.float32,
                      interpret: bool | None = None, fmt: str = "linear"):
-    """Fused quantise-dequantise through the n-bit takum grid without
+    """Fused quantise-dequantise through a wire format's grid without
     materialising the word tensor in HBM (one read + one write per tile).
 
-    ``fmt="linear"`` rounds through the linear takum grid (pure-integer
-    tile body, bit-identical to ``encode`` + ``decode``); ``fmt="lns"``
-    rounds through the *logarithmic* grid — RNE in ell_bar space, the
-    LNS format's native rounding domain. Input is cast to f32; output is
-    ``dtype`` with the input's shape (padding stripped as in
-    :func:`takum_decode`). No scaling is applied — scaling lives a level
-    up in ``core.quant``. ``use_kernel``/``interpret`` as in
-    :func:`takum_decode`.
+    ``(fmt, n)`` resolve through the registry: ``fmt="linear"`` rounds
+    through the linear takum grid (pure-integer tile body, bit-identical
+    to ``encode`` + ``decode``); ``fmt="lns"`` through the *logarithmic*
+    grid — RNE in ell_bar space, that format's native rounding domain;
+    ``fmt="posit"`` through the posit baseline grid. ``fmt`` may also be
+    a registry name or ``FormatSpec`` on its own (``n`` then unused).
+    Input is cast to f32; output is ``dtype`` with the input's shape
+    (padding stripped as in :func:`takum_decode`). No scaling is applied
+    — scaling lives a level up in ``core.quant``.
+    ``use_kernel``/``interpret`` as in :func:`takum_decode`.
     """
-    if fmt not in ("linear", "lns"):
-        raise ValueError(f"unknown fake-quant fmt {fmt!r}")
+    spec = formats.resolve_wire(fmt, n)
     if not use_kernel:
-        if fmt == "lns":
-            return kref.fake_quant_lns_ref(x, n, dtype=dtype)
-        return kref.fake_quant_ref(x, n, dtype=dtype)
+        return kref.fake_quant_ref(x, spec, dtype=dtype)
     interpret = interpret_default() if interpret is None else interpret
     x2, shape, size = _pad2d_for(jnp.asarray(x, jnp.float32), block)
-    y = kquant.fake_quant_kernel_call(x2, n, block=block,
-                                      interpret=interpret, dtype=dtype,
-                                      fmt=fmt)
+    y = kquant.fake_quant_kernel_call(x2, spec, block=block,
+                                      interpret=interpret, dtype=dtype)
     return _unpad2d(y, shape, size)
 
 
@@ -130,19 +142,22 @@ def _pad_to(x, m0, m1):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def quant_matmul(x, w_words, n: int, use_kernel: bool = True,
+def quant_matmul(x, w_words, fmt, use_kernel: bool = True,
                  interpret: bool | None = None,
                  block: tuple | None = None):
     """x [..., K] @ decode(w_words [K, N]) -> [..., N] f32.
 
-    The weight-only-quantised matmul: ``w_words`` are *linear* takum wire
-    words (``word_dtype(n)``), decoded tile-by-tile in VMEM on the way
-    into the MXU; ``x`` is any float dtype (computed in f32) with
-    arbitrary leading dims, flattened to rows. Rows/cols are padded to
-    the block grid and unpadded on return — zero words decode to 0.0, so
-    K/N padding is exact. Differentiable in x (weights are wire-format
-    constants; the VJP decodes once and uses a plain matmul — serving
-    never needs it, QAT examples do).
+    The weight-only-quantised matmul: ``w_words`` are wire words of any
+    float-decoding format — linear takum (``fmt`` an int width, the
+    original API, or ``"takum<n>"``) or the posit baseline
+    (``"posit<n>"``); the LNS formats take :func:`lns_matmul`'s ℓ̄
+    datapath instead and are rejected here. Words are decoded
+    tile-by-tile in VMEM on the way into the MXU; ``x`` is any float
+    dtype (computed in f32) with arbitrary leading dims, flattened to
+    rows. Rows/cols are padded to the block grid and unpadded on return
+    — zero words decode to 0.0, so K/N padding is exact. Differentiable
+    in x (weights are wire-format constants; the VJP decodes once and
+    uses a plain matmul — serving never needs it, QAT examples do).
 
     ``use_kernel=False`` lowers to a fused XLA decode+dot instead of
     Pallas (used off-TPU and by dry-runs). ``interpret=None``
@@ -152,7 +167,7 @@ def quant_matmul(x, w_words, n: int, use_kernel: bool = True,
     with ``bm`` clamped to the padded M so small serving batches don't
     round up to a full 128-row tile.
     """
-    return _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret,
+    return _quant_matmul_fwd_impl(x, w_words, fmt, use_kernel, interpret,
                                   block)
 
 
@@ -163,7 +178,7 @@ def _qmm_blocks(m0: int, block: tuple | None) -> tuple:
     return (bm, takum_matmul.DEFAULT_BN, takum_matmul.DEFAULT_BK)
 
 
-def _matmul_fwd_common(x, w_words, n, use_kernel, interpret, block, *,
+def _matmul_fwd_common(x, w_words, spec, use_kernel, interpret, block, *,
                        ref_fn, prep_fn, kernel_fn):
     """Shared shape plumbing for the quantised-matmul wrappers: flatten
     leading dims, pad to the block grid (zero words decode to 0.0 /
@@ -173,7 +188,7 @@ def _matmul_fwd_common(x, w_words, n, use_kernel, interpret, block, *,
     x2 = x.reshape(-1, x.shape[-1])
     n0 = w_words.shape[-1]
     if not use_kernel:
-        return ref_fn(x2, w_words, n).reshape(*lead, n0)
+        return ref_fn(x2, w_words, spec).reshape(*lead, n0)
     interpret_ = interpret_default() if interpret is None else interpret
     m0 = x2.shape[0]
     bm, bn, bk = _qmm_blocks(m0, block)
@@ -183,68 +198,91 @@ def _matmul_fwd_common(x, w_words, n, use_kernel, interpret, block, *,
     return out[:m0, :n0].reshape(*lead, n0)
 
 
-def _matmul_bwd_common(n, res, g, *, decode_fn):
+def _matmul_bwd_common(spec, res, g):
     """Shared VJP: weights are wire-format constants, so the only
     cotangent is ``g @ decode(w)^T`` (STE through any input rounding)."""
     x, w_words = res
-    w = decode_fn(w_words, n)
+    w = spec.decode_tile(w_words)
     gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
     return gx, None
 
 
-def _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret, block):
+def _dense_wire_spec(fmt):
+    """Resolve + guard for the float-decoding matmul: LNS words carry
+    the ℓ̄ datapath and must go through :func:`lns_matmul`."""
+    spec = formats.resolve_wire(fmt)
+    if spec.has_lns_parts:
+        raise ValueError(
+            f"format {spec.name!r} is on the LNS ℓ̄ datapath; use "
+            "ops.lns_matmul for it")
+    return spec
+
+
+def _quant_matmul_fwd_impl(x, w_words, fmt, use_kernel, interpret, block):
+    spec = _dense_wire_spec(fmt)
     return _matmul_fwd_common(
-        x, w_words, n, use_kernel, interpret, block,
+        x, w_words, spec, use_kernel, interpret, block,
         ref_fn=kref.qmatmul_ref,
         prep_fn=lambda x2: x2,
         kernel_fn=lambda xp, wp, bm, bn, bk, itp:
-            takum_matmul.qmatmul_kernel_call(xp, wp, n, bm=bm, bn=bn,
+            takum_matmul.qmatmul_kernel_call(xp, wp, spec, bm=bm, bn=bn,
                                              bk=bk, interpret=itp))
 
 
-def _qmm_fwd(x, w_words, n, use_kernel, interpret, block):
-    return _quant_matmul_fwd_impl(x, w_words, n, use_kernel, interpret,
+def _qmm_fwd(x, w_words, fmt, use_kernel, interpret, block):
+    return _quant_matmul_fwd_impl(x, w_words, fmt, use_kernel, interpret,
                                   block), (x, w_words)
 
 
-def _qmm_bwd(n, use_kernel, interpret, block, res, g):
-    return _matmul_bwd_common(n, res, g, decode_fn=kref.decode_ref)
+def _qmm_bwd(fmt, use_kernel, interpret, block, res, g):
+    return _matmul_bwd_common(_dense_wire_spec(fmt), res, g)
 
 
 quant_matmul.defvjp(_qmm_fwd, _qmm_bwd)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
-def lns_matmul(x, w_words, n: int, accum: str = "linear",
+def lns_matmul(x, w_words, fmt, accum: str = "linear",
                use_kernel: bool = True, interpret: bool | None = None,
                block: tuple | None = None):
     """x [..., K] ⊗ decode(w_words [K, N]) -> [..., N] f32 on the LNS
     datapath.
 
-    ``w_words`` are *logarithmic* takum wire words
-    (``float_to_lns_takum``); ``x`` is float and is quantised to the same
-    LNS grid on the way in (the LNS-DNN design point: both operands live
-    in ell_bar space so every product is one exact int32 add — see
-    ``kernels/lns_matmul.py``). ``accum="linear"`` converts each product
-    to f32 and accumulates linearly, matching the ``core.lns.lns_matmul``
-    reference bit-exactly for K = 1 and to f32 summation-order tolerance
-    otherwise; ``accum="gauss"`` folds products in the log domain through
-    the Gauss-log LUT and leaves it once per output element (adds one
-    ``2^-(wf+1)`` re-quantisation per fold). Padding, ``use_kernel``,
-    ``interpret`` and ``block`` behave as in :func:`quant_matmul`
-    (``use_kernel=False`` is the fused XLA decode+dot fallback, one extra
-    f32 rounding per product — it is inherently linear-accumulating, so
-    ``accum="gauss"`` with ``use_kernel=False`` raises rather than
-    silently returning the wrong accumulator; the kernel path runs on any
-    backend via the interpreter). Differentiable in x with a straight-
-    through estimate through the activation quantisation: the VJP is
-    ``g @ decode(w)^T``.
+    ``w_words`` are *logarithmic* takum wire words (``fmt`` an int width
+    — resolving to ``lns-takum<n>`` — a registry name, or a
+    ``FormatSpec`` with ``has_lns_parts``); ``x`` is float and is
+    quantised to the same LNS grid on the way in (the LNS-DNN design
+    point: both operands live in ell_bar space so every product is one
+    exact int32 add — see ``kernels/lns_matmul.py``). ``accum="linear"``
+    converts each product to f32 and accumulates linearly, matching the
+    ``core.lns.lns_matmul`` reference bit-exactly for K = 1 and to f32
+    summation-order tolerance otherwise; ``accum="gauss"`` folds
+    products in the log domain through the Gauss-log LUT and leaves it
+    once per output element (adds one ``2^-(wf+1)`` re-quantisation per
+    fold). Padding, ``use_kernel``, ``interpret`` and ``block`` behave
+    as in :func:`quant_matmul` (``use_kernel=False`` is the fused XLA
+    decode+dot fallback, one extra f32 rounding per product — it is
+    inherently linear-accumulating, so ``accum="gauss"`` with
+    ``use_kernel=False`` raises rather than silently returning the wrong
+    accumulator; the kernel path runs on any backend via the
+    interpreter). Differentiable in x with a straight-through estimate
+    through the activation quantisation: the VJP is ``g @ decode(w)^T``.
     """
-    return _lns_matmul_fwd_impl(x, w_words, n, accum, use_kernel,
+    return _lns_matmul_fwd_impl(x, w_words, fmt, accum, use_kernel,
                                 interpret, block)
 
 
-def _lns_matmul_fwd_impl(x, w_words, n, accum, use_kernel, interpret, block):
+def _lns_wire_spec(fmt):
+    spec = formats.resolve_lns(fmt)
+    if not spec.has_lns_parts:
+        raise ValueError(
+            f"format {spec.name!r} has no LNS ℓ̄ datapath; use "
+            "ops.quant_matmul for float-decoding wire formats")
+    return spec
+
+
+def _lns_matmul_fwd_impl(x, w_words, fmt, accum, use_kernel, interpret,
+                         block):
     # guard here, not in the public wrapper: custom_vjp routes grad calls
     # straight to the fwd rule, which must refuse just the same
     if accum == "gauss" and not use_kernel:
@@ -252,25 +290,24 @@ def _lns_matmul_fwd_impl(x, w_words, n, accum, use_kernel, interpret, block):
             "accum='gauss' needs the kernel path: the XLA fallback is a "
             "fused decode+dot and cannot Gauss-accumulate; pass "
             "use_kernel=True (interpret mode runs on any backend)")
-    from repro.core import takum as takum_mod
+    spec = _lns_wire_spec(fmt)
     return _matmul_fwd_common(
-        x, w_words, n, use_kernel, interpret, block,
+        x, w_words, spec, use_kernel, interpret, block,
         ref_fn=kref.lns_qmatmul_ref,
         # activations join the weights on the LNS grid before tiling
-        prep_fn=lambda x2: takum_mod.float_to_lns_takum(
-            x2.astype(jnp.float32), n),
+        prep_fn=lambda x2: spec.encode_tile(x2),
         kernel_fn=lambda xp, wp, bm, bn, bk, itp:
-            klns.lns_matmul_kernel_call(xp, wp, n, accum=accum, bm=bm,
+            klns.lns_matmul_kernel_call(xp, wp, spec, accum=accum, bm=bm,
                                         bn=bn, bk=bk, interpret=itp))
 
 
-def _lmm_fwd(x, w_words, n, accum, use_kernel, interpret, block):
-    return _lns_matmul_fwd_impl(x, w_words, n, accum, use_kernel,
+def _lmm_fwd(x, w_words, fmt, accum, use_kernel, interpret, block):
+    return _lns_matmul_fwd_impl(x, w_words, fmt, accum, use_kernel,
                                 interpret, block), (x, w_words)
 
 
-def _lmm_bwd(n, accum, use_kernel, interpret, block, res, g):
-    return _matmul_bwd_common(n, res, g, decode_fn=kref.lns_decode_ref)
+def _lmm_bwd(fmt, accum, use_kernel, interpret, block, res, g):
+    return _matmul_bwd_common(_lns_wire_spec(fmt), res, g)
 
 
 lns_matmul.defvjp(_lmm_fwd, _lmm_bwd)
@@ -279,7 +316,7 @@ lns_matmul.defvjp(_lmm_fwd, _lmm_bwd)
 MAX_ATTN_Q_ROWS = 1024  # G*tq rows above this fall back to the oracle
 
 
-def takum_attention(q, k_cache, v_cache, n: int = 0, fmt: str = "none", *,
+def takum_attention(q, k_cache, v_cache, n=0, fmt="none", *,
                     pos, start=None, window: int = 0,
                     use_kernel: bool | None = None,
                     interpret: bool | None = None,
@@ -288,13 +325,14 @@ def takum_attention(q, k_cache, v_cache, n: int = 0, fmt: str = "none", *,
     """Attention over a wire-format KV cache, decoded inside the kernel.
 
     ``q [B, tq, H, hd]`` (any float dtype) attends over
-    ``k_cache``/``v_cache [B, Tmax, Hkv, hd]`` — raw takum words
-    (``fmt="linear"``: ``float_to_takum`` words; ``fmt="lns"``:
-    ``float_to_lns_takum`` words) or plain floats (``fmt="none"``, the
-    identity encoding: the uncompressed cache rides the same fused
-    kernel). Returns ``[B, tq, H, hd]`` f32. GQA (``H = G * Hkv``) is
-    handled by grouping the ``G`` query heads of each KV head into one
-    row block so every K/V tile is read once per KV head.
+    ``k_cache``/``v_cache [B, Tmax, Hkv, hd]`` — raw wire words of any
+    registered format (``(fmt, n)`` resolve through the registry:
+    ``("linear", 8)``, ``"takum16"``, ``"posit8"``, a ``FormatSpec`` …)
+    or plain floats under the identity codec (``fmt="none"``: the
+    uncompressed cache rides the same fused kernel). Returns
+    ``[B, tq, H, hd]`` f32. GQA (``H = G * Hkv``) is handled by grouping
+    the ``G`` query heads of each KV head into one row block so every
+    K/V tile is read once per KV head.
 
     Masking: causal from ``pos`` (the position of ``q[:, 0]``; python
     int or traced scalar), per-sequence ``start`` (``[B]`` first valid
@@ -317,10 +355,7 @@ def takum_attention(q, k_cache, v_cache, n: int = 0, fmt: str = "none", *,
     ``G * tq > max_q_rows`` (prefill-shaped) fall back to the oracle:
     the kernel's query block is VMEM-resident per (b, h) step.
     """
-    if fmt not in ("linear", "lns", "none"):
-        raise ValueError(f"unknown KV wire fmt {fmt!r}")
-    if fmt != "none" and not n:
-        raise ValueError(f"fmt={fmt!r} needs a word width n")
+    spec = formats.resolve(fmt, n)
     b, tq, h, hd = q.shape
     tmax, hkv = k_cache.shape[1], k_cache.shape[2]
     if h % hkv:
@@ -329,7 +364,7 @@ def takum_attention(q, k_cache, v_cache, n: int = 0, fmt: str = "none", *,
     if use_kernel is None:
         use_kernel = not interpret_default()
     if not use_kernel or g * tq > max_q_rows:
-        return kref.attention_ref(q, k_cache, v_cache, n, fmt, pos=pos,
+        return kref.attention_ref(q, k_cache, v_cache, 0, spec, pos=pos,
                                   start=start, window=window)
     interpret = interpret_default() if interpret is None else interpret
     rows = g * tq
@@ -349,7 +384,7 @@ def takum_attention(q, k_cache, v_cache, n: int = 0, fmt: str = "none", *,
     start_arr = (jnp.zeros((b,), jnp.int32) if start is None
                  else jnp.asarray(start, jnp.int32).reshape(b))
     out4 = kattn.attention_kernel_call(q4, kw, vw, pos_arr, start_arr,
-                                       n=n, fmt=fmt, bk=bk, tq=tq,
+                                       spec=spec, bk=bk, tq=tq,
                                        window=window, interpret=interpret)
     out = out4[:, :, :rows].reshape(b, hkv, g, tq, hd)
     return out.transpose(0, 3, 1, 2, 4).reshape(b, tq, h, hd)
@@ -357,45 +392,50 @@ def takum_attention(q, k_cache, v_cache, n: int = 0, fmt: str = "none", *,
 
 @jax.tree_util.register_pytree_node_class
 class WireMatrix:
-    """A 2D weight in takum wire format, decoded on use.
+    """A 2D weight in wire format, decoded on use.
 
     Drop-in for a float ``[K, N]`` matrix at ``x @ w`` sites: jax defers
     the matmul to :meth:`__rmatmul__`, which routes through
-    ``quant_matmul`` (``fmt="linear"``, the weight-stationary decode-once
-    kernel on TPU, the fused XLA decode+dot elsewhere) or
-    :func:`lns_matmul` (``fmt="lns"``, the ℓ̄-datapath kernel — the wire
-    words are logarithmic takums and activations are quantised to the
-    same grid per call). This is how ``serve.engine.quantize_weights(...,
-    mode="wire")`` swaps a served model onto n/32-size HBM weights
-    without touching the model code.
+    :func:`quant_matmul` for float-decoding formats (linear takum and
+    the posit baseline — the weight-stationary decode-once kernel on
+    TPU, the fused XLA decode+dot elsewhere) or :func:`lns_matmul` for
+    ``has_lns_parts`` formats (the ℓ̄-datapath kernel — the wire words
+    are logarithmic takums and activations are quantised to the same
+    grid per call). The route is chosen from the spec's *attributes*,
+    so registering a new format needs no change here. This is how
+    ``serve.engine.quantize_weights(..., mode="wire")`` swaps a served
+    model onto n/32-size HBM weights without touching the model code.
     """
 
-    def __init__(self, words, n: int, *, block: tuple | None = None,
-                 fmt: str = "linear"):
-        if fmt not in ("linear", "lns"):
-            raise ValueError(f"unknown wire fmt {fmt!r}")
+    def __init__(self, words, n=None, *, block: tuple | None = None,
+                 fmt="linear"):
+        self.spec = formats.resolve_wire(fmt, n)
         self.words = words
-        self.n = n
         self.block = block
-        self.fmt = fmt
 
     @classmethod
-    def encode(cls, w, n: int, *, block: tuple | None = None,
-               fmt: str = "linear"):
-        from repro.core import takum as takum_mod
-        enc = (takum_mod.float_to_lns_takum if fmt == "lns"
-               else takum_mod.float_to_takum)
-        return cls(enc(jnp.asarray(w, jnp.float32), n), n, block=block,
-                   fmt=fmt)
+    def encode(cls, w, n=None, *, block: tuple | None = None,
+               fmt="linear"):
+        spec = formats.resolve_wire(fmt, n)
+        return cls(spec.encode_tile(jnp.asarray(w, jnp.float32)), block=block,
+                   fmt=spec)
 
-    # pytree: words are the leaf; width/block/fmt are static
+    # back-compat accessors (the spec carries the identity)
+    @property
+    def n(self) -> int:
+        return self.spec.n
+
+    @property
+    def fmt(self) -> str:
+        return self.spec.kind
+
+    # pytree: words are the leaf; the spec and block are static
     def tree_flatten(self):
-        return (self.words,), (self.n, self.block, self.fmt)
+        return (self.words,), (self.spec, self.block)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        fmt = aux[2] if len(aux) > 2 else "linear"
-        return cls(children[0], aux[0], block=aux[1], fmt=fmt)
+        return cls(children[0], block=aux[1], fmt=aux[0])
 
     @property
     def shape(self):
@@ -410,19 +450,17 @@ class WireMatrix:
         return jnp.float32
 
     def decode(self, dtype=jnp.float32):
-        if self.fmt == "lns":
-            return kref.lns_decode_ref(self.words, self.n, dtype=dtype)
-        return kref.decode_ref(self.words, self.n, dtype=dtype)
+        return self.spec.decode_tile(self.words, dtype=dtype)
 
     def __rmatmul__(self, x):
-        if self.fmt == "lns":
-            out = lns_matmul(x, self.words, self.n, "linear",
+        if self.spec.has_lns_parts:
+            out = lns_matmul(x, self.words, self.spec, "linear",
                              not interpret_default(), None, self.block)
         else:
-            out = quant_matmul(x, self.words, self.n,
+            out = quant_matmul(x, self.words, self.spec,
                                not interpret_default(), None, self.block)
         return out.astype(x.dtype)
 
     def __repr__(self):
         return (f"WireMatrix(shape={tuple(self.words.shape)}, "
-                f"n={self.n}, fmt={self.fmt!r})")
+                f"spec={self.spec.name!r})")

@@ -1,12 +1,14 @@
 """Fused fake-quantisation Pallas kernel (encode + decode in one VMEM pass).
 
-Used by quantisation-aware training: the round trip through the takum
-grid happens tile-by-tile without materialising the word tensor in HBM —
-one HBM read + one HBM write instead of three. The round trip is pure
-integer dataflow (encode bit-disassembly -> decode IEEE bit-assembly,
-see core/takum.py): two bitcasts bracket an all-integer tile body, which
-keeps this kernel bit-identical to ``ref.fake_quant_ref`` and cheap on
-the VPU.
+Used by quantisation-aware training: the round trip through a wire
+format's grid happens tile-by-tile without materialising the word tensor
+in HBM — one HBM read + one HBM write instead of three. The tile body is
+format-agnostic: it composes the ``encode_tile``/``decode_tile`` hooks of
+a :class:`repro.formats.FormatSpec`, so the linear-takum round trip stays
+pure integer dataflow (two bitcasts bracketing an all-integer body, bit-
+identical to ``ref.fake_quant_ref``), the LNS round trip pays its one
+log + one exp (ℓ̄ is that grid's native rounding domain), and the posit
+baseline rides the same kernel unchanged.
 """
 
 from __future__ import annotations
@@ -17,36 +19,28 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import takum
+from repro import formats
 
 __all__ = ["fake_quant_kernel_call"]
 
 DEFAULT_BLOCK = (256, 128)
 
 
-def _fake_quant_tile(x_ref, out_ref, *, n: int, dtype, fmt: str):
-    x = x_ref[...]
-    if fmt == "lns":
-        words = takum.float_to_lns_takum(x, n)
-        out_ref[...] = takum.lns_takum_to_float(words, n, dtype=dtype)
-    else:
-        words = takum.float_to_takum(x, n)
-        out_ref[...] = takum.takum_to_float(words, n, dtype=dtype)
+def _fake_quant_tile(x_ref, out_ref, *, spec: formats.FormatSpec, dtype):
+    out_ref[...] = spec.decode_tile(spec.encode_tile(x_ref[...]),
+                                    dtype=dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "block", "interpret",
-                                             "dtype", "fmt"))
-def fake_quant_kernel_call(x, n: int, *, block=DEFAULT_BLOCK,
-                           interpret: bool = False, dtype=jnp.float32,
-                           fmt: str = "linear"):
-    """fmt="linear": round trip through the linear takum grid (integer-only
-    tile body). fmt="lns": round trip through the logarithmic grid — the
-    tile body pays one log and one exp (the LNS grid's native rounding
-    domain is ell_bar, so encode/decode must cross the transcendental)."""
+@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret",
+                                             "dtype"))
+def fake_quant_kernel_call(x, spec: formats.FormatSpec, *,
+                           block=DEFAULT_BLOCK, interpret: bool = False,
+                           dtype=jnp.float32):
+    """Round trip f32 [R, C] through ``spec``'s grid -> ``dtype`` [R, C]."""
     r, c = x.shape
     grid = (r // block[0], c // block[1])
     return pl.pallas_call(
-        functools.partial(_fake_quant_tile, n=n, dtype=dtype, fmt=fmt),
+        functools.partial(_fake_quant_tile, spec=spec, dtype=dtype),
         grid=grid,
         in_specs=[pl.BlockSpec(block, lambda i, j: (i, j))],
         out_specs=pl.BlockSpec(block, lambda i, j: (i, j)),

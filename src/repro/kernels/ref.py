@@ -3,14 +3,21 @@
 Each kernel in ``takum_codec.py`` / ``quantize.py`` / ``takum_matmul.py``
 must match its oracle here bit-exactly (codec) or to accumulation
 tolerance (matmul) across the shape/dtype sweeps in
-``tests/test_kernels.py``.
+``tests/test_kernels.py`` and the registry-parametrised suite in
+``tests/test_formats_registry.py``.
 
-These oracles call the *same* integer-only reconstruction as the kernels
-(``takum.takum_to_float`` / ``float_to_takum``), so kernel, fallback and
-reference paths are bit-identical by construction; the retained
-ldexp-dataflow reference lives separately as
-``takum.takum_to_float_ref`` and is pinned against the integer path in
-``tests/test_int_reconstruct.py``.
+These oracles call the *same* ``FormatSpec`` codec hooks as the kernels
+(``spec.decode_tile`` / ``spec.encode_tile`` — for linear takum that is
+the integer-only ``takum.takum_to_float`` / ``float_to_takum``
+reconstruction), so kernel, fallback and reference paths are
+bit-identical by construction; the retained ldexp-dataflow reference
+lives separately as ``takum.takum_to_float_ref`` and is pinned against
+the integer path in ``tests/test_int_reconstruct.py``.
+
+Every entry point resolves its format argument through
+``repro.formats.resolve``, so callers may pass a ``FormatSpec``, a
+registry name (``"posit8"``), a legacy kind string plus width, or — the
+original API — a bare int width meaning linear takum.
 """
 
 from __future__ import annotations
@@ -18,52 +25,70 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import takum
+from repro import formats
 
 __all__ = ["decode_ref", "encode_ref", "fake_quant_ref", "qmatmul_ref",
            "lns_decode_ref", "fake_quant_lns_ref", "lns_qmatmul_ref",
            "attention_ref"]
 
 
-def decode_ref(words, n: int, dtype=jnp.float32):
-    """takum words -> float."""
-    return takum.takum_to_float(words, n, dtype=dtype)
+def decode_ref(words, fmt, dtype=jnp.float32):
+    """wire words -> float (``fmt``: spec / name / int width = linear)."""
+    return formats.resolve(fmt).decode_tile(words, dtype=dtype)
 
 
-def encode_ref(x, n: int):
-    """float32 -> takum words (RNE, saturating)."""
-    return takum.float_to_takum(x, n)
+def encode_ref(x, fmt):
+    """float32 -> wire words (RNE, saturating)."""
+    return formats.resolve(fmt).encode_tile(x)
 
 
-def fake_quant_ref(x, n: int, dtype=jnp.float32):
+def fake_quant_ref(x, fmt, dtype=jnp.float32):
     """fused quantise-dequantise (no scaling; scaling lives a level up)."""
-    return takum.takum_to_float(takum.float_to_takum(x, n), n, dtype=dtype)
-
-
-def qmatmul_ref(x, w_words, n: int, out_dtype=jnp.float32):
-    """x [M, K] float  @  decode(w_words [K, N])  -> [M, N] float.
-
-    The weight-only-quantised matmul: weights live in HBM as takum words
-    and are decoded on the way into the MXU.
-    """
-    w = takum.takum_to_float(w_words, n, dtype=jnp.float32)
-    return jnp.dot(x.astype(jnp.float32), w,
-                   preferred_element_type=jnp.float32).astype(out_dtype)
+    spec = formats.resolve(fmt)
+    return spec.decode_tile(spec.encode_tile(x), dtype=dtype)
 
 
 def lns_decode_ref(words, n: int, dtype=jnp.float32):
-    """takum-LNS words -> float (tau of Definition 1 on representation (10))."""
-    return takum.lns_takum_to_float(words, n, dtype=dtype)
+    """takum-LNS words -> float (tau of Definition 1 on representation
+    (10)); legacy alias for ``decode_ref(words, ("lns", n))``."""
+    return formats.resolve("lns", n).decode_tile(words, dtype=dtype)
 
 
 def fake_quant_lns_ref(x, n: int, dtype=jnp.float32):
     """Fused quantise-dequantise on the *logarithmic* takum grid."""
-    return takum.lns_takum_to_float(
-        takum.float_to_lns_takum(jnp.asarray(x, jnp.float32), n), n,
-        dtype=dtype)
+    return fake_quant_ref(x, formats.resolve("lns", n), dtype=dtype)
 
 
-def attention_ref(q, k_cache, v_cache, n: int, fmt: str, *, pos,
+def qmatmul_ref(x, w_words, fmt, out_dtype=jnp.float32):
+    """x [M, K] float  @  decode(w_words [K, N])  -> [M, N] float.
+
+    The weight-only-quantised matmul: weights live in HBM as wire words
+    (any float-decoding format — linear takum or the posit baseline)
+    and are decoded on the way into the MXU.
+    """
+    w = formats.resolve(fmt).decode_tile(w_words, dtype=jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def lns_qmatmul_ref(x, w_words, fmt, out_dtype=jnp.float32):
+    """XLA fallback for the LNS matmul: activations quantised to the LNS
+    grid, both sides decoded to f32, one fused dot.
+
+    Versus the Pallas kernel (which adds the int32 ``ell`` lanes and
+    exponentiates the *sum*), each product here carries one extra f32
+    multiply rounding — bounded by half an ulp per product, far below the
+    n <= 16 quantisation noise. The demo-scale exact-ℓ̄ reference is
+    ``core.lns.lns_matmul``.
+    """
+    spec = formats.resolve_lns(fmt)
+    xq = spec.decode_tile(spec.encode_tile(jnp.asarray(x, jnp.float32)))
+    w = spec.decode_tile(w_words)
+    return jnp.dot(xq, w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def attention_ref(q, k_cache, v_cache, n, fmt="none", *, pos,
                   start=None, window: int = 0, out_dtype=jnp.float32):
     """Decode-then-attend oracle for the fused takum attention kernel.
 
@@ -71,30 +96,26 @@ def attention_ref(q, k_cache, v_cache, n: int, fmt: str, *, pos,
     decoded to f32 up front (the HBM materialisation the Pallas kernel
     exists to avoid) and dense masked attention runs over it. q is
     ``[B, tq, H, hd]``, the caches ``[B, Tmax, Hkv, hd]`` wire words
-    (floats for ``fmt="none"``); ``pos`` is the position of ``q[:, 0]``,
-    ``start`` the per-sequence first valid key position (left padding),
-    ``window`` a sliding-window length (0 = full causal). All-masked
-    query rows (``qpos < start``) produce finite garbage — a uniform
-    average — never NaN; NaR words in *valid* positions decode to NaN
-    and poison the rows attending to them.
+    (floats for the identity codec); ``pos`` is the position of
+    ``q[:, 0]``, ``start`` the per-sequence first valid key position
+    (left padding), ``window`` a sliding-window length (0 = full
+    causal). All-masked query rows (``qpos < start``) produce finite
+    garbage — a uniform average — never NaN; NaR words in *valid*
+    positions decode to NaN and poison the rows attending to them.
     """
-    if fmt == "linear":
-        k = takum.takum_to_float(k_cache, n, dtype=jnp.float32)
-        v = takum.takum_to_float(v_cache, n, dtype=jnp.float32)
-    elif fmt == "lns":
-        k = takum.lns_takum_to_float(k_cache, n, dtype=jnp.float32)
-        v = takum.lns_takum_to_float(v_cache, n, dtype=jnp.float32)
-    elif fmt == "none":
+    spec = formats.resolve(fmt, n)
+    if spec.is_identity:
         # stored-dtype K/V (the pre-kernel behaviour): only scores and
         # softmax run in f32, so a bf16 cache costs no extra traffic
         k, v = k_cache, v_cache
     else:
-        raise ValueError(f"unknown KV wire fmt {fmt!r}")
+        k = spec.decode_tile(k_cache, dtype=jnp.float32)
+        v = spec.decode_tile(v_cache, dtype=jnp.float32)
     b, tq, h, hd = q.shape
     tk, hkv = k.shape[1], k.shape[2]
     g = h // hkv
     q5 = q.reshape(b, tq, hkv, g, hd)
-    if fmt != "none":
+    if not spec.is_identity:
         q5 = q5.astype(jnp.float32)
     scores = (jnp.einsum("bqkgd,bskd->bkgqs", q5, k).astype(jnp.float32)
               * (hd ** -0.5))
@@ -109,20 +130,3 @@ def attention_ref(q, k_cache, v_cache, n: int, fmt: str, *, pos,
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
     return out.reshape(b, tq, h, hd).astype(out_dtype)
-
-
-def lns_qmatmul_ref(x, w_words, n: int, out_dtype=jnp.float32):
-    """XLA fallback for the LNS matmul: activations quantised to the LNS
-    grid, both sides decoded to f32, one fused dot.
-
-    Versus the Pallas kernel (which adds the int32 ``ell`` lanes and
-    exponentiates the *sum*), each product here carries one extra f32
-    multiply rounding — bounded by half an ulp per product, far below the
-    n <= 16 quantisation noise. The demo-scale exact-ℓ̄ reference is
-    ``core.lns.lns_matmul``.
-    """
-    xq = takum.lns_takum_to_float(
-        takum.float_to_lns_takum(jnp.asarray(x, jnp.float32), n), n)
-    w = takum.lns_takum_to_float(w_words, n)
-    return jnp.dot(xq, w,
-                   preferred_element_type=jnp.float32).astype(out_dtype)

@@ -17,11 +17,12 @@ group ``r // tq``, query position ``pos + r % tq``) so that every query
 row of a KV head shares the same K/V tiles. Grid: ``(B, Hkv, Tpad/bk)``
 with the KV-block dimension innermost:
 
-* **K tile decode** — ``(bk, hd)`` words -> f32 in VMEM (integer-only
-  ``takum.takum_to_float`` reconstruction for ``fmt="linear"``; the
-  ``(ell, flags)`` int32 lanes of ``takum.decode_lns_parts`` + one exp
-  for ``fmt="lns"``; a plain cast for ``fmt="none"``, which makes the
-  uncompressed cache ride the same kernel by encoding identity);
+* **K tile decode** — ``(bk, hd)`` words -> f32 in VMEM through the
+  cache format's ``FormatSpec.decode_tile`` (integer-only IEEE
+  reconstruction for linear takum; decode + one exp for LNS takum; the
+  2C posit decode for the posit baseline; a plain cast for the
+  identity codec, which makes the uncompressed cache ride the same
+  kernel);
 * ``q @ k^T`` on the MXU, f32 accumulate, then causal / ``start`` /
   sliding-``window`` masking at ``_MASKED`` (finite, matching the jnp
   oracle — all-masked rows stay finite instead of NaN);
@@ -59,7 +60,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import takum
+from repro import formats
 
 __all__ = ["attention_kernel_call", "DEFAULT_BK", "MASKED"]
 
@@ -67,29 +68,21 @@ DEFAULT_BK = 256     # KV-sequence tile (keys per decode-and-accumulate step)
 MASKED = -1e30       # finite mask value (matches the jnp serving oracle)
 
 
-def kv_words_to_f32(words, n: int, fmt: str):
+def kv_words_to_f32(words, spec: formats.FormatSpec):
     """Decode one KV tile to f32: the codec as the attention input stage.
 
-    ``fmt="linear"``: the integer-only IEEE reconstruction (shifts + one
-    bitcast). ``fmt="lns"``: ``decode_lns_parts`` int32 lanes, then the
-    single ``sqrt(e)^ell`` exp — the only transcendental on the path,
-    shared with the LNS matmul kernel so the two datapaths cannot
-    diverge. ``fmt="none"``: the cache already holds floats (identity
-    encoding).
-    """
-    if fmt == "none":
-        return words.astype(jnp.float32)
-    if fmt == "linear":
-        return takum.takum_to_float(words, n, dtype=jnp.float32)
-    from repro.kernels.lns_matmul import _lns_to_f32
-    ell, flags = takum.decode_lns_parts(words, n)
-    return _lns_to_f32(flags & 1, ell, (flags >> 1) & 1, (flags >> 2) & 1,
-                       takum.frac_width(n))
+    One call into the registered format's ``decode_tile`` hook — the
+    integer-only IEEE reconstruction for linear takum, decode + the
+    single ``sqrt(e)^ell`` exp for LNS takum (the only transcendental on
+    the path, the same dataflow as the LNS matmul kernel), the 2C posit
+    decode for the baseline, a cast for the identity codec (the cache
+    already holds floats)."""
+    return spec.decode_tile(words, dtype=jnp.float32)
 
 
 def _attn_tile(pos_ref, start_ref, q_ref, kw_ref, vw_ref, o_ref,
-               m_ref, l_ref, acc_ref, *, n: int, fmt: str, bk: int,
-               tq: int, window: int, scale: float):
+               m_ref, l_ref, acc_ref, *, spec: formats.FormatSpec,
+               bk: int, tq: int, window: int, scale: float):
     """One (b, h, kk) step of the online-softmax loop."""
     b = pl.program_id(0)
     kk = pl.program_id(2)
@@ -111,7 +104,7 @@ def _attn_tile(pos_ref, start_ref, q_ref, kw_ref, vw_ref, o_ref,
     @pl.when(in_band)
     def _slab():
         q = q_ref[0, 0].astype(jnp.float32)              # (rows, hd)
-        k = kv_words_to_f32(kw_ref[0, :, 0, :], n, fmt)  # (bk, hd) f32
+        k = kv_words_to_f32(kw_ref[0, :, 0, :], spec)  # (bk, hd) f32
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # (rows, bk)
@@ -130,7 +123,7 @@ def _attn_tile(pos_ref, start_ref, q_ref, kw_ref, vw_ref, o_ref,
         corr = jnp.exp(m_prev - m_new)                   # (rows, 128)
         m_ref[...] = m_new
         l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-        v = kv_words_to_f32(vw_ref[0, :, 0, :], n, fmt)  # (bk, hd) f32
+        v = kv_words_to_f32(vw_ref[0, :, 0, :], spec)  # (bk, hd) f32
         pv = jnp.dot(p, v, preferred_element_type=jnp.float32)
         acc_ref[...] = acc_ref[...] * corr[:, :1] + pv
 
@@ -159,13 +152,14 @@ def _kv_index(b, h, kk, pos_ref, start_ref, *, bk: int, tq: int,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n", "fmt", "bk", "tq", "window",
+                   static_argnames=("spec", "bk", "tq", "window",
                                     "interpret"))
-def attention_kernel_call(q4, kw, vw, pos, start, *, n: int, fmt: str,
+def attention_kernel_call(q4, kw, vw, pos, start, *,
+                          spec: formats.FormatSpec,
                           bk: int = DEFAULT_BK, tq: int, window: int = 0,
                           interpret: bool = False):
     """q4 [B, Hkv, rows, hd] float, kw/vw [B, Tpad, Hkv, hd] wire words
-    (or floats for ``fmt="none"``) -> [B, Hkv, rows, hd] f32.
+    (or floats for the identity codec) -> [B, Hkv, rows, hd] f32.
 
     ``rows = G * tq`` with row ``r`` = (group ``r // tq``, query position
     ``pos + r % tq``); padding rows alias valid positions and are
@@ -202,7 +196,7 @@ def attention_kernel_call(q4, kw, vw, pos, start, *, n: int, fmt: str,
         kwargs["compiler_params"] = pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
     return pl.pallas_call(
-        functools.partial(_attn_tile, n=n, fmt=fmt, bk=bk, tq=tq,
+        functools.partial(_attn_tile, spec=spec, bk=bk, tq=tq,
                           window=window, scale=hd ** -0.5),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, rows, hd), jnp.float32),

@@ -1,8 +1,11 @@
-"""Pallas TPU kernels for the batched takum codec.
+"""Pallas TPU kernels for the batched wire-format codec.
 
 TPU adaptation of the paper's combinational codec: words are processed as
 VMEM tiles on the VPU; the whole decode/encode dataflow is branch-free
-select/shift/add vector code, so a tile is one straight-line pass.
+select/shift/add vector code, so a tile is one straight-line pass. The
+tile bodies are format-agnostic — they call the ``decode_tile`` /
+``encode_tile`` hooks of a :class:`repro.formats.FormatSpec`, so the same
+kernels serve linear takum, logarithmic takum and the posit baseline.
 
 Tiling: tiles of (block_rows, 128) words — 128 lanes is the VPU lane
 count; block_rows is sized so that a tile of words + a tile of floats fits
@@ -11,17 +14,17 @@ comfortably in VMEM (a (256, 128) f32 tile is 128 KiB; words at uint16 are
 double buffering).
 
 The takum advantage ported from the paper: all header math happens in a
-fixed 12-bit window independent of n, so the kernel's op count is
-constant in n — unlike a posit kernel whose CLZ/shift chains widen with n
-(see benchmarks/fig2_decoder_area.py).
+fixed 12-bit window independent of n, so the takum kernels' op count is
+constant in n — unlike the posit spec, whose CLZ/shift chains widen with n
+(see benchmarks/fig2_decoder_area.py). Registering posit behind the same
+``FormatSpec`` interface is what lets the codec benches measure exactly
+that contrast on identical tile schedules.
 
-Both kernels are **integer-only end to end**: ``takum.takum_to_float``
+The takum kernels are **integer-only end to end**: ``decode_tile``
 assembles IEEE words directly (shifts + one bitcast — no ldexp / float
-divide), and ``takum.float_to_takum`` disassembles them the same way, so
-the tile body never touches the VPU's float pipes except for the final
-bitcast. Kernel, jnp fallback (kernels/ref.py) and the fused fake-quant
-kernel all call the same codec functions and therefore stay bit-identical
-by construction.
+divide), and ``encode_tile`` disassembles them the same way. Kernel, jnp
+fallback (kernels/ref.py) and the fused fake-quant kernel all call the
+same spec hooks and therefore stay bit-identical by construction.
 """
 
 from __future__ import annotations
@@ -29,35 +32,35 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import takum
-from repro.core.bitops import word_dtype
+import jax.numpy as jnp
+
+from repro import formats
 
 __all__ = ["decode_kernel_call", "encode_kernel_call", "DEFAULT_BLOCK"]
 
 DEFAULT_BLOCK = (256, 128)
 
 
-def _decode_tile(words_ref, out_ref, *, n: int, dtype):
-    w = words_ref[...]
-    out_ref[...] = takum.takum_to_float(w, n, dtype=dtype)
+def _decode_tile(words_ref, out_ref, *, spec: formats.FormatSpec, dtype):
+    out_ref[...] = spec.decode_tile(words_ref[...], dtype=dtype)
 
 
-def _encode_tile(x_ref, out_ref, *, n: int):
-    x = x_ref[...]
-    out_ref[...] = takum.float_to_takum(x, n)
+def _encode_tile(x_ref, out_ref, *, spec: formats.FormatSpec):
+    out_ref[...] = spec.encode_tile(x_ref[...])
 
 
-@functools.partial(jax.jit, static_argnames=("n", "block", "interpret", "dtype"))
-def decode_kernel_call(words, n: int, *, block=DEFAULT_BLOCK,
-                       interpret: bool = False, dtype=jnp.float32):
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "block", "interpret", "dtype"))
+def decode_kernel_call(words, spec: formats.FormatSpec, *,
+                       block=DEFAULT_BLOCK, interpret: bool = False,
+                       dtype=jnp.float32):
     """words [R, C] (R % block[0] == 0, C % block[1] == 0) -> float [R, C]."""
     r, c = words.shape
     grid = (r // block[0], c // block[1])
     return pl.pallas_call(
-        functools.partial(_decode_tile, n=n, dtype=dtype),
+        functools.partial(_decode_tile, spec=spec, dtype=dtype),
         grid=grid,
         in_specs=[pl.BlockSpec(block, lambda i, j: (i, j))],
         out_specs=pl.BlockSpec(block, lambda i, j: (i, j)),
@@ -66,17 +69,17 @@ def decode_kernel_call(words, n: int, *, block=DEFAULT_BLOCK,
     )(words)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "block", "interpret"))
-def encode_kernel_call(x, n: int, *, block=DEFAULT_BLOCK,
+@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
+def encode_kernel_call(x, spec: formats.FormatSpec, *, block=DEFAULT_BLOCK,
                        interpret: bool = False):
-    """float32 [R, C] -> takum words [R, C]."""
+    """float32 [R, C] -> wire words [R, C] in ``spec.word_dtype``."""
     r, c = x.shape
     grid = (r // block[0], c // block[1])
     return pl.pallas_call(
-        functools.partial(_encode_tile, n=n),
+        functools.partial(_encode_tile, spec=spec),
         grid=grid,
         in_specs=[pl.BlockSpec(block, lambda i, j: (i, j))],
         out_specs=pl.BlockSpec(block, lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r, c), word_dtype(n)),
+        out_shape=jax.ShapeDtypeStruct((r, c), spec.word_dtype),
         interpret=interpret,
     )(x)

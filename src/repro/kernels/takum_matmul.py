@@ -1,9 +1,12 @@
 """Weight-only-quantised matmul Pallas kernel: takum decode feeding the MXU.
 
 This is the paper's codec in its natural habitat — the input stage of an
-arithmetic unit. Weights are stored in HBM as takum8/takum16 words
-(2-4x less HBM traffic than f32/bf16); each (bk, bn) weight tile is
-decoded to f32 *in VMEM* and immediately consumed by the MXU matmul.
+arithmetic unit. Weights are stored in HBM as wire words — takum8/takum16
+or the posit8/posit16 baseline, anything whose ``FormatSpec`` decodes
+straight to float (the LNS formats take the ℓ̄ datapath of
+``lns_matmul.py`` instead) — at 2-4x less HBM traffic than f32/bf16;
+each (bk, bn) weight tile is decoded to f32 *in VMEM* via
+``spec.decode_tile`` and immediately consumed by the MXU matmul.
 
 Weight-stationary schedule
 --------------------------
@@ -13,7 +16,7 @@ classic M-outer schedule. For each ``(j, kk)`` the weight tile is decoded
 ``pl.when(pl.program_id(2) == 0)``; all M steps then reuse the decoded
 tile straight from VMEM. The old M-outer grid re-ran the decode ``M/bm``
 times per tile, paying the VPU cost (and defeating the codec's fixed
-12-bit-window advantage) on every revisit. The decode itself is the
+12-bit-window advantage) on every revisit. For takum the decode is the
 integer-only reconstruction of ``core/takum.py`` — shifts + one bitcast,
 no ldexp/divide — so the VPU work that remains overlaps the MXU under
 Mosaic pipelining (``dimension_semantics``: N parallel, K/M arbitrary).
@@ -45,7 +48,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import takum
+from repro import formats
 
 __all__ = ["qmatmul_kernel_call", "DEFAULT_ACC_BUDGET"]
 
@@ -53,15 +56,15 @@ DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 128, 128, 128
 DEFAULT_ACC_BUDGET = 4 * 1024 * 1024  # VMEM bytes for the (M, bn) stripe
 
 
-def _qmm_ws_tile(x_ref, w_ref, o_ref, wdec_ref, *, n: int, bm: int):
+def _qmm_ws_tile(x_ref, w_ref, o_ref, wdec_ref, *,
+                 spec: formats.FormatSpec, bm: int):
     """One (j, kk, i) step: decode-once weight tile, stripe accumulate."""
     kk = pl.program_id(1)
     i = pl.program_id(2)
 
     @pl.when(i == 0)
     def _decode():  # once per (j, kk): all M steps reuse wdec_ref
-        wdec_ref[...] = takum.takum_to_float(w_ref[...], n,
-                                             dtype=jnp.float32)
+        wdec_ref[...] = spec.decode_tile(w_ref[...], dtype=jnp.float32)
 
     part = jnp.dot(
         x_ref[...].astype(jnp.float32), wdec_ref[...],
@@ -81,14 +84,15 @@ def _qmm_ws_tile(x_ref, w_ref, o_ref, wdec_ref, *, n: int, bm: int):
         o_ref[rows, :] += part
 
 
-def _qmm_tile_moutermost(x_ref, w_ref, o_ref, *, n: int):
+def _qmm_tile_moutermost(x_ref, w_ref, o_ref, *,
+                         spec: formats.FormatSpec):
     """Classic (i, j, kk) K-innermost schedule: consecutive-visit output
     accumulation, one decode per grid step (big-M fallback)."""
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    w = takum.takum_to_float(w_ref[...], n, dtype=jnp.float32)
+    w = spec.decode_tile(w_ref[...], dtype=jnp.float32)
     o_ref[...] += jnp.dot(
         x_ref[...].astype(jnp.float32), w,
         preferred_element_type=jnp.float32,
@@ -96,12 +100,13 @@ def _qmm_tile_moutermost(x_ref, w_ref, o_ref, *, n: int):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n", "bm", "bn", "bk", "interpret",
+                   static_argnames=("spec", "bm", "bn", "bk", "interpret",
                                     "acc_budget_bytes"))
-def qmatmul_kernel_call(x, w_words, n: int, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
+def qmatmul_kernel_call(x, w_words, spec: formats.FormatSpec, *,
+                        bm=DEFAULT_BM, bn=DEFAULT_BN,
                         bk=DEFAULT_BK, interpret: bool = False,
                         acc_budget_bytes: int = DEFAULT_ACC_BUDGET):
-    """x [M, K] float  @  decode(w_words [K, N])  -> f32 [M, N].
+    """x [M, K] float  @  spec.decode(w_words [K, N])  -> f32 [M, N].
 
     M % bm == K % bk == N % bn == 0 (ops.py pads; zero words decode to 0.0,
     so K/N padding is exact).
@@ -116,7 +121,7 @@ def qmatmul_kernel_call(x, w_words, n: int, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
             kwargs["compiler_params"] = pltpu.TPUCompilerParams(
                 dimension_semantics=("parallel", "arbitrary", "arbitrary"))
         return pl.pallas_call(
-            functools.partial(_qmm_ws_tile, n=n, bm=bm),
+            functools.partial(_qmm_ws_tile, spec=spec, bm=bm),
             grid=grid,
             in_specs=[
                 pl.BlockSpec((bm, bk), lambda j, kk, i: (i, kk)),
@@ -134,7 +139,7 @@ def qmatmul_kernel_call(x, w_words, n: int, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
         kwargs["compiler_params"] = pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
     return pl.pallas_call(
-        functools.partial(_qmm_tile_moutermost, n=n),
+        functools.partial(_qmm_tile_moutermost, spec=spec),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),

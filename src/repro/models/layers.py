@@ -195,16 +195,16 @@ def causal_mask(tq, tk, offset=0, window=0):
 
 
 def _encode_kv(k, v, cache, kv_quant: str):
-    """Encode fresh k/v to the cache's wire format: (fmt, n, kw, vw)."""
-    from repro.configs.base import parse_kv_quant
-    fmt, nbits = parse_kv_quant(kv_quant)
-    if fmt == "none":
-        return fmt, 0, k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
-    from repro.core import takum as takum_mod
-    enc = (takum_mod.float_to_lns_takum if fmt == "lns"
-           else takum_mod.float_to_takum)
-    return fmt, nbits, enc(k.astype(jnp.float32), nbits), \
-        enc(v.astype(jnp.float32), nbits)
+    """Encode fresh k/v to the cache's wire format: (spec, kw, vw).
+
+    One registry lookup; the identity codec casts to the cache dtype,
+    wire codecs encode through their ``FormatSpec.encode_tile``."""
+    from repro import formats
+    spec = formats.resolve(kv_quant)
+    if spec.is_identity:
+        return spec, k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    return spec, spec.encode_tile(k.astype(jnp.float32)), \
+        spec.encode_tile(v.astype(jnp.float32))
 
 
 # fused decode-attention dispatch (kernels/takum_attention.py): 'auto'
@@ -233,7 +233,7 @@ def attention(params, x, cfg, positions, *, xa=None, mask=None,
         # with the chunked kernel over the *current* k/v — the cache-read
         # path would materialise [Tq, Tk] scores (tens of GB at 32k)
         pos = cache["pos"]
-        _, _, kw, vw = _encode_kv(k, v, cache, cfg.kv_quant)
+        _, kw, vw = _encode_kv(k, v, cache, cfg.kv_quant)
         ck = jax.lax.dynamic_update_slice(cache["k"], kw, (0, pos, 0, 0))
         cv = jax.lax.dynamic_update_slice(cache["v"], vw, (0, pos, 0, 0))
         new_cache = {"k": ck, "v": cv, "pos": pos + x.shape[1]}
@@ -248,7 +248,7 @@ def attention(params, x, cfg, positions, *, xa=None, mask=None,
         # exist in HBM. The uncompressed cache rides the same op with
         # fmt="none" (identity encoding).
         pos = cache["pos"]
-        fmt, nbits, kw, vw = _encode_kv(k, v, cache, cfg.kv_quant)
+        spec, kw, vw = _encode_kv(k, v, cache, cfg.kv_quant)
         ck = jax.lax.dynamic_update_slice(cache["k"], kw, (0, pos, 0, 0))
         cv = jax.lax.dynamic_update_slice(cache["v"], vw, (0, pos, 0, 0))
         new_cache = {"k": ck, "v": cv, "pos": pos + x.shape[1]}
@@ -257,7 +257,7 @@ def attention(params, x, cfg, positions, *, xa=None, mask=None,
             new_cache["start"] = start
         from repro.kernels import ops as kops
         out = kops.takum_attention(
-            q, ck, cv, nbits, fmt, pos=pos, start=start, window=window,
+            q, ck, cv, spec.n, spec, pos=pos, start=start, window=window,
             use_kernel=KV_ATTN_KERNEL,
             block=cfg.kv_block or None).astype(x.dtype)
     elif (cache is None and xa is None and x.shape[1] >= ATTN_CHUNK_T

@@ -296,11 +296,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=None, start=None) -> list:
     """Stacked caches matching the layer plan (leading dim = scan length)."""
     dtype = DTYPES[cfg.dtype] if dtype is None else dtype
-    kv_dtype = dtype
-    if cfg.kv_quant != "none":
-        from repro.configs.base import parse_kv_quant
-        from repro.core.bitops import word_dtype
-        kv_dtype = word_dtype(parse_kv_quant(cfg.kv_quant)[1])
+    from repro import formats
+    kv_spec = formats.resolve(cfg.kv_quant)
+    # wire caches store raw words; the identity codec stays in `dtype`
+    kv_dtype = kv_spec.word_dtype or dtype
     caches = []
     for pat, n_rep in layer_plan(cfg):
         def one_cache():

@@ -31,15 +31,19 @@ def quantize_weights(params, fmt: str = "takum8", *,
                      mode: str = "fake",
                      skip_substrings=_DEFAULT_SKIP,
                      verbose: bool = True):
-    """Quantise a served model's weight matrices to takum.
+    """Quantise a served model's weight matrices to a wire format.
 
-    ``fmt`` selects grid and width: ``"takum8"``/``"takum16"`` are the
-    *linear* wire formats; ``"lns-takum8"``/``"lns-takum16"`` the
+    ``fmt`` is any wire format of the codec registry
+    (``repro.formats.wire_names()``): ``"takum8"``/``"takum16"`` are the
+    *linear* takum formats; ``"lns-takum8"``/``"lns-takum16"`` the
     *logarithmic* ones — wire leaves then route every ``x @ w`` through
     the ℓ̄-datapath kernel (``ops.lns_matmul``), which also quantises the
     incoming activations to the LNS grid (the LNS-DNN design point), and
     fake-quantised leaves round-trip through the LNS grid unscaled
-    (takum's sqrt(e)^±255 range needs no scale side-channel).
+    (takum's sqrt(e)^±255 range needs no scale side-channel);
+    ``"posit8"``/``"posit16"`` are the posit (es = 2, 2C dataflow)
+    comparison baseline, riding the same decode-once matmul as linear
+    takum — the only posit-specific code is its ``FormatSpec`` entry.
 
     ``mode="fake"`` (default): quantise-dequantise in place; the model
     runs unchanged on float weights rounded to the takum grid — what
@@ -69,20 +73,17 @@ def quantize_weights(params, fmt: str = "takum8", *,
     """
     import warnings
 
-    from repro.core import quant as q
-    from repro.core import takum as tk
+    from repro import formats
     from repro.kernels import ops as kops
     if mode not in ("fake", "wire"):
         raise ValueError(f"unknown quantize_weights mode {mode!r}")
-    try:  # one format parser for weights and KV caches (configs.base)
-        kind, n = parse_kv_quant(fmt)
+    try:  # one format registry for weights and KV caches (repro.formats)
+        spec = formats.resolve_wire(fmt)
     except ValueError:
-        kind = "none"
-    if kind == "none":  # 'none' is a KV setting, not a weight format
-        raise ValueError(f"unknown quantize_weights fmt {fmt!r} "
-                         "(expected 'takum<n>' or 'lns-takum<n>')")
-    lns_fmt = kind == "lns"
-    spec = q.QuantSpec(fmt="takum", n=n, scale="per_tensor")
+        # enumerate the registry so this message cannot rot as formats land
+        raise ValueError(
+            f"unknown quantize_weights fmt {fmt!r} (expected a wire "
+            f"format: {', '.join(formats.wire_names())})") from None
     # exact leaf names applied via `x @ w` (matmul defers to WireMatrix);
     # other matrices go through einsum sites that need real arrays
     wire_leaves = {"wq", "wk", "wv", "wo", "wg", "wr", "w1", "w2"}
@@ -110,14 +111,13 @@ def quantize_weights(params, fmt: str = "takum8", *,
                 "skip_substrings explicitly")
         if mode == "wire" and named and leaf.ndim in (2, 3):
             counts["wired"] += 1
-            return kops.WireMatrix.encode(
-                leaf, n, fmt="lns" if lns_fmt else "linear")
+            return kops.WireMatrix.encode(leaf, fmt=spec)
         counts["fake"] += 1
-        if lns_fmt:  # LNS grid round trip, unscaled (range needs no scale)
-            return tk.lns_takum_to_float(
-                tk.float_to_lns_takum(leaf.astype(jnp.float32), n),
-                n).astype(leaf.dtype)
-        return q.dequantize(q.quantize(leaf, spec)).astype(leaf.dtype)
+        # the spec's fake-quant policy: per-tensor power-of-two centring
+        # for linear takum, unscaled grid round trip for LNS/posit
+        # (their dynamic range needs no scale side-channel)
+        return spec.fake_quant(leaf.astype(jnp.float32),
+                               dtype=leaf.dtype)
 
     out = jax.tree_util.tree_map_with_path(visit, params)
     # only user-supplied entries are typo-checked: the defaults are
@@ -129,7 +129,7 @@ def quantize_weights(params, fmt: str = "takum8", *,
         warnings.warn(f"quantize_weights: skip_substrings {unmatched} "
                       "matched no parameter name — typo?", stacklevel=2)
     if verbose:
-        print(f"quantize_weights[{fmt}/{mode}]: {counts['wired']} wired, "
+        print(f"quantize_weights[{spec.name}/{mode}]: {counts['wired']} wired, "
               f"{counts['fake']} fake-quantised, {counts['skipped']} "
               f"skipped, {counts['non_matrix']} non-matrix")
     return out

@@ -287,10 +287,12 @@ def test_qmatmul_big_m_fallback_matches_ref():
     x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
     w_words = takum.float_to_takum(
         rng.normal(size=(k, nn)).astype(np.float32), n)
+    from repro import formats
+    spec = formats.resolve("linear", n)
     ws = takum_matmul.qmatmul_kernel_call(
-        x, w_words, n, bm=16, bn=32, bk=32, interpret=True)
+        x, w_words, spec, bm=16, bn=32, bk=32, interpret=True)
     fb = takum_matmul.qmatmul_kernel_call(
-        x, w_words, n, bm=16, bn=32, bk=32, interpret=True,
+        x, w_words, spec, bm=16, bn=32, bk=32, interpret=True,
         acc_budget_bytes=0)
     want = kref.qmatmul_ref(x, w_words, n)
     np.testing.assert_allclose(np.asarray(fb), np.asarray(want),

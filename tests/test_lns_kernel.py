@@ -18,7 +18,12 @@ import pytest
 
 from repro.core import lns, takum
 from repro.kernels import ops, ref
+from repro import formats
 from repro.kernels.lns_matmul import lns_matmul_kernel_call
+
+
+def _lns_spec(n):
+    return formats.resolve("lns", n)
 
 WIDTHS = [8, 16]
 # two block configs: square tiles, and rectangular tiles that tile M/K/N
@@ -87,10 +92,11 @@ def test_lns_matmul_both_schedules_agree(accum, n):
     w = np.abs(rng.normal(size=(16, 16))).astype(np.float32) + 0.1
     xw, ww = _words(x, n), _words(w, n)
     ws = np.asarray(lns_matmul_kernel_call(
-        xw, ww, n, accum=accum, bm=8, bn=8, bk=8, interpret=True))
+        xw, ww, _lns_spec(n), accum=accum, bm=8, bn=8, bk=8,
+        interpret=True))
     mo = np.asarray(lns_matmul_kernel_call(
-        xw, ww, n, accum=accum, bm=8, bn=8, bk=8, interpret=True,
-        acc_budget_bytes=0))
+        xw, ww, _lns_spec(n), accum=accum, bm=8, bn=8, bk=8,
+        interpret=True, acc_budget_bytes=0))
     rtol = 1e-6 if accum == "linear" else 2e-3
     np.testing.assert_allclose(ws, mo, rtol=rtol, atol=1e-7)
     np.testing.assert_allclose(ws, _ref(x, ww, n),
@@ -153,7 +159,8 @@ def test_gauss_tables_reject_overflowing_widths():
         lns_matmul_kernel_call(
             _words(np.ones((8, 8), np.float32), 24),
             _words(np.ones((8, 8), np.float32), 24),
-            24, accum="gauss", bm=8, bn=8, bk=8, interpret=True)
+            _lns_spec(24), accum="gauss", bm=8, bn=8, bk=8,
+            interpret=True)
 
 
 @pytest.mark.parametrize("n", WIDTHS)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import formats
 from repro.core import takum
 from repro.core.bitops import word_dtype
 from repro.kernels import ops, ref
@@ -23,12 +24,12 @@ H = G * HKV
 
 
 def _cache(rng, n, fmt, t=T):
+    spec = formats.resolve(fmt, n)
     kf = rng.normal(size=(B, t, HKV, HD)).astype(np.float32)
     vf = rng.normal(size=(B, t, HKV, HD)).astype(np.float32)
-    if fmt == "none":
+    if spec.is_identity:
         return jnp.asarray(kf), jnp.asarray(vf)
-    enc = takum.float_to_lns_takum if fmt == "lns" else takum.float_to_takum
-    return enc(kf, n), enc(vf, n)
+    return spec.encode_tile(kf), spec.encode_tile(vf)
 
 
 def _q(rng, tq=1):
@@ -53,12 +54,15 @@ def _parity(q, kw, vw, n, fmt, *, pos, start=None, window=0, block=32,
     return got, want
 
 
-@pytest.mark.parametrize("fmt,n", [("linear", 8), ("linear", 16),
-                                   ("lns", 8), ("lns", 16), ("none", 0)])
-def test_decode_step_parity(fmt, n):
+@pytest.mark.parametrize("spec", formats.all_formats(),
+                         ids=lambda s: s.name)
+def test_decode_step_parity(spec):
+    # registry-parametrised: every registered codec (posit included)
+    # sweeps through the fused kernel, replacing the old hand-written
+    # (fmt, n) pair list
     rng = np.random.default_rng(0)
-    kw, vw = _cache(rng, n, fmt)
-    _parity(_q(rng), kw, vw, n, fmt, pos=T - 1)
+    kw, vw = _cache(rng, spec.n, spec)
+    _parity(_q(rng), kw, vw, spec.n, spec, pos=T - 1)
 
 
 @pytest.mark.parametrize("fmt,n", [("linear", 16), ("lns", 16)])
