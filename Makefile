@@ -4,12 +4,13 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: check test kernel-parity docs bench bench-json bench-smoke \
-	dist-selftest
+	serve-gate dist-selftest
 
 # tier-1 tests + interpret-mode kernel parity + doc-snippet smoke + the
-# CI-sized bench schema gate (the kernel parity suites are part of
-# tier-1; all are also runnable standalone below)
-check: test kernel-parity docs bench-smoke
+# CI-sized bench schema gate + both dispatch paths of the paged serving
+# stack (the kernel parity suites are part of tier-1; all are also
+# runnable standalone below)
+check: test kernel-parity docs bench-smoke serve-gate
 
 test:
 	$(PY) -m pytest -x -q
@@ -18,12 +19,24 @@ test:
 # while iterating on kernels)
 kernel-parity:
 	$(PY) -m pytest -q tests/test_kernels.py tests/test_int_reconstruct.py \
-		tests/test_lns_kernel.py tests/test_takum_attention.py
+		tests/test_lns_kernel.py tests/test_takum_attention.py \
+		tests/test_paged_attention.py
+
+# the paged-serving scheduler under both attention dispatch paths: the
+# jnp oracle (=0) and the interpret-mode Pallas kernel (=1). The env is
+# read at import, so each setting is its own pytest process.
+serve-gate:
+	REPRO_KV_ATTN_KERNEL=0 $(PY) -m pytest -q tests/test_serve_scheduler.py \
+		tests/test_page_pool.py
+	REPRO_KV_ATTN_KERNEL=1 $(PY) -m pytest -q tests/test_serve_scheduler.py \
+		tests/test_page_pool.py
 
 # execute the fenced python snippets in the documentation (doctest-style
-# smoke: the docs cannot drift from the code silently)
+# smoke: the docs cannot drift from the code silently) + the runnable
+# continuous-batching example
 docs:
 	$(PY) tools/check_docs.py README.md docs/*.md
+	$(PY) examples/serve_continuous.py
 
 bench:
 	$(PY) -m benchmarks.run

@@ -22,7 +22,15 @@ every format drawn from the codec registry (``repro.formats``):
   (``kv_attention`` rows): one-token flash decode at T in {1k,8k},
   takum8/16 and posit8 wire caches vs the f32 cache (the identity
   codec), reporting µs and the bytes-read ratio — the serving-bandwidth
-  quantity the fused ``ops.takum_attention`` kernel exists to shrink.
+  quantity the fused ``ops.takum_attention`` kernel exists to shrink;
+* end-to-end serving (``serving`` rows, schema 4): staggered
+  mixed-length requests through the real ``ServeEngine`` on the reduced
+  arch — continuous batching over the paged takum-wire KV pool vs the
+  lockstep static batch, takum8 vs f32 caches — reporting measured
+  tokens/s plus the *analytic* concurrent-sequence capacity at a fixed
+  HBM budget (pool page bytes from the codec registry, the
+  ``docs/serving.md`` capacity math: takum8 pages fit 4x the sequences
+  of f32 in the same budget).
 
 On non-TPU hosts the matmul/attention numbers use the XLA fallback
 paths (``use_kernel=False``) — the Pallas interpreter is a correctness
@@ -61,6 +69,8 @@ LNS_FORMATS = ("lns-takum8", "lns-takum16")
 KV_T = (1024, 8192)                    # decode-step context lengths
 KV_FORMATS = ("none", "takum8", "takum16", "posit8")
 KV_B, KV_HKV, KV_G, KV_HD = 1, 8, 4, 128
+SERVE_FORMATS = ("none", "takum8")     # cache formats for the serving rows
+SERVE_HBM_BUDGET = 1 << 30             # capacity-math budget (1 GiB)
 
 
 def _path(use_kernel: bool) -> str:
@@ -181,6 +191,82 @@ def _kv_attention_section(rng, use_kernel: bool, kv_t) -> dict:
     return out
 
 
+def _serving_section(smoke: bool) -> dict:
+    """End-to-end serving rows: continuous batching (paged pool) vs
+    lockstep, takum8 vs f32 cache, on the reduced arch. Tokens/s is a
+    wall-clock measurement of the *schedule* (CPU numbers gate the
+    dataflow, TPU numbers the trajectory); capacity is analytic from
+    the registry's bytes-per-element at a fixed HBM budget."""
+    import dataclasses
+
+    import jax as _jax
+
+    from repro.configs import get_arch
+    from repro.models import model as _model
+    from repro.serve.engine import CACHE_SLACK, ServeEngine
+    from repro.serve.paged import PagePool, pages_for
+
+    base = get_arch("phi3-medium-14b").reduced
+    if smoke:
+        lens, max_new, ps, db = (16, 9, 4, 13), 4, 8, 2
+    else:
+        lens = (512, 73, 260, 41, 480, 150, 300, 210)
+        max_new, ps, db = 64, 64, 4
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, base.vocab, n)) for n in lens]
+    total_ctx = max(lens) + max_new
+    params = _model.init(_jax.random.PRNGKey(0), base)
+    out: dict = {}
+    for fmt in SERVE_FORMATS:
+        cfg = dataclasses.replace(base, kv_quant=fmt)
+        spec = formats.resolve(fmt)
+        eng = ServeEngine(params, cfg, max_len=total_ctx, page_size=ps,
+                          decode_batch=db)
+        # analytic capacity at the budget (registry bytes-per-element):
+        # lockstep pads every sequence to max(prompt) + max_new + slack;
+        # the paged pool pays each request's own bucket + growth pages,
+        # so mixed prompt lengths buy extra concurrent sequences even
+        # before early EOS
+        pool = PagePool(cfg, batch=db, num_pages=2, page_size=ps,
+                        max_pages=pages_for(total_ctx, ps),
+                        alloc_device=False)
+        token_bytes = pool.page_hbm_bytes() // ps
+        seq_bytes = pool.page_hbm_bytes() * round(
+            sum(pages_for(-(-n // ps) * ps + max_new - 1, ps)
+                for n in lens) / len(lens))
+        contig_bytes = (total_ctx + CACHE_SLACK) * token_bytes
+        name = "f32" if spec.is_identity else spec.name
+        for mode in ("lockstep", "continuous"):
+            gen = (eng.generate_lockstep if mode == "lockstep"
+                   else eng.generate)
+            gen(prompts, max_new)                      # compile warmup
+            t0 = time.perf_counter()
+            outs = gen(prompts, max_new)
+            dt = time.perf_counter() - t0
+            new_toks = sum(len(o) - len(p) for o, p in zip(outs, prompts))
+            row = {
+                "n_requests": len(prompts),
+                "max_new": max_new,
+                "page_size": ps,
+                "decode_batch": db,
+                "us": round(dt * 1e6, 2),
+                "tokens_per_s": round(new_toks / dt, 2),
+                "hbm_budget": SERVE_HBM_BUDGET,
+                "capacity_at_budget": SERVE_HBM_BUDGET // (
+                    seq_bytes if mode == "continuous" else contig_bytes),
+                "seq_kv_bytes": (seq_bytes if mode == "continuous"
+                                 else contig_bytes),
+                "hbm_ratio_vs_f32": round(
+                    spec.bytes_per_elem(jnp.float32) / 4, 4),
+                "path": "scheduler" if mode == "continuous" else "lockstep",
+            }
+            if mode == "continuous":
+                pstats = eng.scheduler().pool.stats()
+                row["peak_pages"] = pstats.peak_in_use
+            out[f"{mode}/{name}"] = row
+    return out
+
+
 def run(print_fn=print, out_path: str | None = None,
         smoke: bool = False) -> dict:
     rng = np.random.default_rng(0)
@@ -192,7 +278,7 @@ def run(print_fn=print, out_path: str | None = None,
     if out_path is None:
         out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
     doc = {
-        "schema": 3,
+        "schema": 4,
         "smoke": smoke,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": jax.default_backend(),
@@ -201,6 +287,7 @@ def run(print_fn=print, out_path: str | None = None,
         "qmatmul": _qmatmul_section(rng, use_kernel, qmm_shape),
         "lns_qmatmul": _lns_qmatmul_section(rng, use_kernel, qmm_shape),
         "kv_attention": _kv_attention_section(rng, use_kernel, kv_t),
+        "serving": _serving_section(smoke),
     }
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=1)
@@ -218,6 +305,11 @@ def run(print_fn=print, out_path: str | None = None,
         print_fn(csv_line(
             f"codec_json/kv_attention/{fmt}", row["us"],
             f"bytes_read_ratio_vs_f32={row['bytes_read_ratio_vs_f32']}"))
+    for key, row in doc["serving"].items():
+        print_fn(csv_line(
+            f"codec_json/serving/{key}", row["us"],
+            f"tokens_per_s={row['tokens_per_s']} "
+            f"capacity_at_budget={row['capacity_at_budget']}"))
     print_fn(f"# wrote {out_path}")
     return doc
 

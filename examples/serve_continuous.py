@@ -1,0 +1,68 @@
+"""Continuous-batching demo: staggered submit/stream over the paged
+takum-wire KV pool, mixed prompt lengths and early EOS.
+
+Six requests with prompt lengths 3..16 go through two decode slots: the
+scheduler admits as pages free up, prefills each request alone
+(page-aligned), packs actives into one compiled step, and releases a
+sequence's pages the step it finishes — watch the interleaved stream
+and the allocator stats. Runs in seconds on CPU (`make docs` executes
+it).
+
+    PYTHONPATH=src python examples/serve_continuous.py
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import model
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    cfg = dataclasses.replace(get_arch("phi3-medium-14b").reduced,
+                              kv_quant="takum8")
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    lens = (11, 3, 16, 7, 14, 5)
+    prompts = [list(rng.integers(0, cfg.vocab, n)) for n in lens]
+
+    eng = ServeEngine(params, cfg, max_len=32, page_size=16,
+                      decode_batch=2)
+    pool = None
+    rids = [eng.submit(p, max_new=4) for p in prompts]
+    print(f"submitted {len(rids)} requests (lengths {lens}) "
+          f"into {eng.decode_batch} decode slots")
+
+    for ev in eng.run():
+        pool = eng.scheduler().pool
+        mark = " <- done, pages released" if ev.done else ""
+        print(f"  rid {ev.rid}: token {ev.token:4d}   "
+              f"[pages in use {pool.pages_in_use():2d}, "
+              f"free {pool.pages_free():2d}]{mark}")
+
+    for r, p in zip(rids, prompts):
+        print(f"request {r} (prompt {len(p):2d} tokens):",
+              eng.result(r)[len(p):])
+
+    stats = pool.stats()
+    print(f"pool: {stats.num_pages} pages x {stats.page_size} positions "
+          f"({stats.hbm_bytes} HBM bytes as {pool.spec.name}), "
+          f"peak in use {stats.peak_in_use}, all returned: "
+          f"{stats.in_use == 0}")
+
+    # the capacity story: same pool page count, 1/4 the HBM vs f32
+    # (accounting only — no device arrays needed)
+    from repro.serve.paged import PagePool
+    f32 = PagePool(dataclasses.replace(cfg, kv_quant="none"),
+                   batch=pool.batch, num_pages=pool.num_pages,
+                   page_size=pool.page_size, max_pages=pool.max_pages,
+                   alloc_device=False)
+    print(f"takum8 pool HBM vs f32: {stats.hbm_bytes} / "
+          f"{f32.hbm_bytes()} = {stats.hbm_bytes / f32.hbm_bytes():.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,7 +31,8 @@ from repro.kernels import takum_attention as kattn
 from repro.kernels import takum_codec, takum_matmul, quantize as kquant
 
 __all__ = ["takum_decode", "takum_encode", "fake_quant_fused", "quant_matmul",
-           "lns_matmul", "takum_attention", "interpret_default", "WireMatrix"]
+           "lns_matmul", "takum_attention", "paged_attention",
+           "interpret_default", "WireMatrix"]
 
 
 def interpret_default() -> bool:
@@ -388,6 +389,67 @@ def takum_attention(q, k_cache, v_cache, n=0, fmt="none", *,
                                        window=window, interpret=interpret)
     out = out4[:, :, :rows].reshape(b, hkv, g, tq, hd)
     return out.transpose(0, 3, 1, 2, 4).reshape(b, tq, h, hd)
+
+
+def paged_attention(q, k_pool, v_pool, table, fmt="none", *, pos,
+                    start=None, window: int = 0,
+                    use_kernel: bool | None = None,
+                    interpret: bool | None = None):
+    """Decode-step attention over a *paged* wire-format KV cache.
+
+    The serving scheduler's counterpart of :func:`takum_attention`:
+    instead of one contiguous ``[B, Tmax, Hkv, hd]`` cache, K/V live in
+    a shared ``[num_pages, page_size, Hkv, hd]`` pool (wire words of any
+    registered format, or floats under the identity codec) and
+    ``table [B, NP]`` maps each sequence's kk-th KV block to a pool
+    page. ``q [B, 1, H, hd]`` is one decode step for a continuous batch:
+    ``pos`` and ``start`` are per-sequence ``(B,)`` vectors (unequal
+    sequence lengths in one packed batch). Returns ``[B, 1, H, hd]``
+    f32.
+
+    ``use_kernel=True`` runs the paged Pallas flash kernel — the block
+    table rides in as a scalar-prefetch operand and the KV index map
+    gathers pages, decoding words tile-by-tile in VMEM; ``False`` is the
+    gather-then-``attention_ref`` oracle (each sequence's pages gathered
+    contiguous, then the standard decode-then-attend reference);
+    ``None`` = kernel on TPU, oracle elsewhere, mirroring
+    :func:`takum_attention`. Pages past a sequence's ``pos`` hold stale
+    words from previous page owners — containment comes from the causal
+    mask, so parity holds for any pool contents beyond ``pos``.
+    """
+    spec = formats.resolve(fmt)
+    b, tq, h, hd = q.shape
+    if tq != 1:
+        raise ValueError(
+            f"paged_attention is decode-only (tq == 1), got tq={tq}; "
+            "prefill runs on the contiguous cache and is scattered into "
+            "pages by the scheduler")
+    hkv = k_pool.shape[2]
+    if h % hkv:
+        raise ValueError(f"n_heads {h} not a multiple of n_kv_heads {hkv}")
+    g = h // hkv
+    ps = k_pool.shape[1]
+    if use_kernel is None:
+        use_kernel = not interpret_default()
+    if not use_kernel:
+        return kref.paged_attention_ref(q, k_pool, v_pool, table, spec,
+                                        pos=pos, start=start, window=window)
+    interpret = interpret_default() if interpret is None else interpret
+    rows = g
+    bq = -(-rows // 8) * 8
+    q4 = q.reshape(b, 1, hkv, g, hd).transpose(0, 2, 3, 1, 4)
+    q4 = q4.reshape(b, hkv, rows, hd).astype(jnp.float32)
+    if bq != rows:
+        q4 = jnp.pad(q4, ((0, 0), (0, 0), (0, bq - rows), (0, 0)))
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    start_arr = (jnp.zeros((b,), jnp.int32) if start is None
+                 else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)))
+    table_arr = jnp.asarray(table, jnp.int32)
+    out4 = kattn.paged_attention_kernel_call(
+        q4, k_pool, v_pool, pos_arr, start_arr, table_arr, spec=spec,
+        ps=ps, window=window, interpret=interpret)
+    out = out4[:, :, :rows].reshape(b, hkv, g, 1, hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, hd)
 
 
 @jax.tree_util.register_pytree_node_class

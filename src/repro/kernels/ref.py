@@ -29,7 +29,7 @@ from repro import formats
 
 __all__ = ["decode_ref", "encode_ref", "fake_quant_ref", "qmatmul_ref",
            "lns_decode_ref", "fake_quant_lns_ref", "lns_qmatmul_ref",
-           "attention_ref"]
+           "attention_ref", "paged_attention_ref"]
 
 
 def decode_ref(words, fmt, dtype=jnp.float32):
@@ -130,3 +130,36 @@ def attention_ref(q, k_cache, v_cache, n, fmt="none", *, pos,
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
     return out.reshape(b, tq, h, hd).astype(out_dtype)
+
+
+def paged_attention_ref(q, k_pool, v_pool, table, fmt="none", *, pos,
+                        start=None, window: int = 0,
+                        out_dtype=jnp.float32):
+    """Gather-then-attend oracle for the paged decode kernel.
+
+    ``k_pool``/``v_pool`` are ``[P, ps, Hkv, hd]`` page pools (wire words
+    or floats for the identity codec) and ``table [B, NP]`` holds each
+    sequence's page ids. Each sequence's block table gathers its pages
+    back into a contiguous ``[NP * ps, Hkv, hd]`` cache, and
+    :func:`attention_ref` — exactly the contiguous decode-then-attend
+    oracle — runs per sequence (vmapped) with that sequence's own
+    ``pos``/``start`` scalar (continuous batching packs unequal-length
+    sequences, so both are ``(B,)`` vectors here). Pages past ``pos``
+    hold stale words from previous owners; the causal mask excludes
+    them, matching the kernel's semantics.
+    """
+    spec = formats.resolve(fmt)
+    b = q.shape[0]
+    hkv, hd = k_pool.shape[2], k_pool.shape[3]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    start = (jnp.zeros((b,), jnp.int32) if start is None
+             else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)))
+
+    def one(q1, tab, p1, s1):
+        kc = k_pool[tab].reshape(-1, hkv, hd)
+        vc = v_pool[tab].reshape(-1, hkv, hd)
+        return attention_ref(q1[None], kc[None], vc[None], spec.n, spec,
+                             pos=p1, start=s1[None], window=window,
+                             out_dtype=out_dtype)[0]
+
+    return jax.vmap(one)(q, jnp.asarray(table, jnp.int32), pos, start)

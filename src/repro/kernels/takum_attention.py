@@ -62,7 +62,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro import formats
 
-__all__ = ["attention_kernel_call", "DEFAULT_BK", "MASKED"]
+__all__ = ["attention_kernel_call", "paged_attention_kernel_call",
+           "DEFAULT_BK", "MASKED"]
 
 DEFAULT_BK = 256     # KV-sequence tile (keys per decode-and-accumulate step)
 MASKED = -1e30       # finite mask value (matches the jnp serving oracle)
@@ -203,3 +204,148 @@ def attention_kernel_call(q4, kw, vw, pos, start, *,
         interpret=interpret,
         **kwargs,
     )(pos, start, q4, kw, vw)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: the KV cache is a pool of pages, gathered via block tables
+# ---------------------------------------------------------------------------
+#
+# The serving scheduler (repro.serve) stores the wire-format cache as one
+# [num_pages, page_size, Hkv, hd] pool per layer; each sequence owns a row
+# of a [B, NP] *block table* mapping its kk-th KV block to a pool page.
+# The table rides in as a third scalar-prefetch operand and the KV index
+# map resolves (seq, kk) -> page id, so the grid gathers pages instead of
+# slicing a contiguous cache. Because continuous batching packs sequences
+# of different lengths into one decode batch, ``pos`` (and ``start``) are
+# per-sequence [B] vectors here, not the contiguous kernel's shared
+# scalar. Decode steps only (tq = 1): every query row of a KV head is one
+# GQA group member at position ``pos[b]``.
+#
+# The clamped-index DMA elision carries over: out-of-band steps repeat
+# the last in-band *page id* (same block index => no new fetch), so a
+# step still reads ~``pos[b]`` wire words per sequence. The block-table
+# read itself is clamped to the table width, which makes stale ``pos``
+# drift on inactive scheduler slots harmless (they attend over the
+# reserved scratch page their table points at).
+
+
+def _paged_attn_tile(pos_ref, start_ref, table_ref, q_ref, kw_ref, vw_ref,
+                     o_ref, m_ref, l_ref, acc_ref, *,
+                     spec: formats.FormatSpec, ps: int, window: int,
+                     scale: float):
+    """One (b, h, kk) step over sequence b's kk-th KV page."""
+    b = pl.program_id(0)
+    kk = pl.program_id(2)
+    pos = pos_ref[b]             # this sequence's newest (query) position
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, MASKED)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    in_band = kk * ps <= pos
+    if window:
+        in_band = in_band & ((kk + 1) * ps - 1 > pos - window)
+
+    @pl.when(in_band)
+    def _slab():
+        q = q_ref[0, 0].astype(jnp.float32)              # (rows, hd)
+        k = kv_words_to_f32(kw_ref[0, :, 0, :], spec)    # (ps, hd) f32
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (rows, ps)
+        kpos = kk * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        msk = kpos <= pos
+        if window:
+            msk = msk & (kpos > pos - window)
+        msk = msk & (kpos >= start_ref[b])
+        s = jnp.where(msk, s, MASKED)
+
+        m_prev = m_ref[...]                              # (rows, 128)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new[:, :1])                    # (rows, ps)
+        corr = jnp.exp(m_prev - m_new)                   # (rows, 128)
+        m_ref[...] = m_new
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        v = kv_words_to_f32(vw_ref[0, :, 0, :], spec)    # (ps, hd) f32
+        pv = jnp.dot(p, v, preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, :1] + pv
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _finalise():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30)
+
+
+def _paged_q_index(b, h, kk, pos_ref, start_ref, table_ref):
+    return (b, h, 0, 0)
+
+
+def _paged_kv_index(b, h, kk, pos_ref, start_ref, table_ref, *, ps: int,
+                    npg: int, window: int):
+    # clamp kk into sequence b's in-band block range, then translate to a
+    # pool page through its block table: repeated page ids on out-of-band
+    # steps elide the DMA exactly as in the contiguous kernel. ``last``
+    # is additionally clamped to the table width so a stale ``pos`` on an
+    # idle scheduler slot can never index past the table.
+    last = jnp.minimum(pos_ref[b] // ps, npg - 1)
+    idx = jnp.minimum(kk, last)
+    if window:
+        first = jnp.maximum((pos_ref[b] - window + 1) // ps, 0)
+        idx = jnp.maximum(idx, jnp.minimum(first, last))
+    return (table_ref[b, idx], 0, h, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "ps", "window", "interpret"))
+def paged_attention_kernel_call(q4, kw, vw, pos, start, table, *,
+                                spec: formats.FormatSpec, ps: int,
+                                window: int = 0, interpret: bool = False):
+    """q4 [B, Hkv, rows, hd] float, kw/vw [P, ps, Hkv, hd] pooled wire
+    words (or floats for the identity codec), table [B, NP] int32 page
+    ids -> [B, Hkv, rows, hd] f32.
+
+    Decode-step shape: ``rows`` is the (padded) GQA group width — every
+    row of (b, h) is the same query position ``pos[b]``; padding rows
+    alias row 0 and are stripped by the caller. ``pos`` and ``start``
+    are per-sequence ``(B,)`` int32 vectors (continuous batching packs
+    unequal-length sequences into one batch). Pages past a sequence's
+    ``pos`` hold stale words from previous page owners — the causal
+    mask (not zero-padding) is what excludes them.
+    """
+    b, hkv, rows, hd = q4.shape
+    num_pages = kw.shape[0]
+    assert kw.shape == vw.shape == (num_pages, ps, hkv, hd), \
+        (kw.shape, vw.shape)
+    npg = table.shape[1]
+    assert table.shape == (b, npg)
+    kv_spec = pl.BlockSpec((1, ps, 1, hd),
+                           functools.partial(_paged_kv_index, ps=ps,
+                                             npg=npg, window=window))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, npg),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, hd), _paged_q_index),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, hd), _paged_q_index),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 128), jnp.float32),   # running max m
+            pltpu.VMEM((rows, 128), jnp.float32),   # running sum l
+            pltpu.VMEM((rows, hd), jnp.float32),    # weighted-V accum
+        ],
+    )
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    return pl.pallas_call(
+        functools.partial(_paged_attn_tile, spec=spec, ps=ps,
+                          window=window, scale=hd ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rows, hd), jnp.float32),
+        interpret=interpret,
+        **kwargs,
+    )(pos, start, table, q4, kw, vw)

@@ -219,7 +219,9 @@ def attention(params, x, cfg, positions, *, xa=None, mask=None,
               bidirectional: bool = False, prefill_fresh: bool = False):
     """Self- or cross-attention with optional decode cache.
 
-    cache (self-attn decode): {"k","v": [B, Tmax, Hkv, hd], "pos": scalar}.
+    cache (self-attn decode): {"k","v": [B, Tmax, Hkv, hd], "pos": scalar},
+    or the paged form {"k","v": [P, ps, Hkv, hd], "table": [B, NP],
+    "pos"/"start": [B]} built by ``transformer.init_paged_cache``.
     Returns (out, new_cache).
     """
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -239,6 +241,37 @@ def attention(params, x, cfg, positions, *, xa=None, mask=None,
         new_cache = {"k": ck, "v": cv, "pos": pos + x.shape[1]}
         out = _sdpa_chunked(q, k, v, window=window, causal_skip=CAUSAL_SKIP,
                             causal=True)
+    elif cache is not None and xa is None and "table" in cache:
+        # paged decode (serve.paged): the cache is a [P, ps, Hkv, hd]
+        # page pool shared by the batch, "table" [B, NP] maps each
+        # sequence's KV block to a pool page, and "pos"/"start" are
+        # per-sequence vectors (continuous batching packs unequal
+        # lengths). Append this step's wire word at
+        # (table[b, pos // ps], pos % ps), then attend through
+        # ops.paged_attention — pages are gathered by the block table
+        # inside the fused kernel (or its gather-then-attend oracle).
+        if x.shape[1] != 1:
+            raise ValueError(
+                "paged KV caches are decode-only (one token per step); "
+                "prefill runs on a contiguous cache and is scattered "
+                "into pages by the scheduler")
+        pos = cache["pos"]                                       # (B,)
+        spec, kw, vw = _encode_kv(k, v, cache, cfg.kv_quant)
+        ps = cache["k"].shape[1]
+        # clamp the block index to the table width: idle scheduler
+        # slots keep stepping with a stale pos and must stay in-table
+        # (they point at the reserved scratch page)
+        pidx = jnp.minimum(pos // ps, cache["table"].shape[1] - 1)
+        page = jnp.take_along_axis(cache["table"], pidx[:, None], 1)[:, 0]
+        off = pos % ps
+        ck = cache["k"].at[page, off].set(kw[:, 0])
+        cv = cache["v"].at[page, off].set(vw[:, 0])
+        new_cache = dict(cache, k=ck, v=cv, pos=pos + 1)
+        from repro.kernels import ops as kops
+        out = kops.paged_attention(
+            q, ck, cv, cache["table"], spec, pos=pos,
+            start=cache["start"], window=window,
+            use_kernel=KV_ATTN_KERNEL).astype(x.dtype)
     elif cache is not None and xa is None:
         # decode / cached-prefill: append this step's k/v in wire format,
         # then attend straight over the wire-format cache through

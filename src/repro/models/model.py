@@ -4,6 +4,7 @@
     forward(params, batch, cfg, remat)               -> (logits, aux)
     loss_fn(params, batch, cfg, remat)               -> (loss, metrics)
     init_cache(cfg, batch, max_len)                  -> cache
+    init_paged_cache(cfg, batch, num_pages, ...)     -> paged cache
     prefill(params, tokens, cfg, cache, media=None)  -> (logits, cache)
     decode_step(params, tokens, cfg, cache, pos)     -> (logits, cache)
 
@@ -103,6 +104,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
         return {"dec": encdec.init_cache(cfg, batch, max_len, dtype),
                 "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), d)}
     return transformer.init_cache(cfg, batch, max_len, dtype, start=start)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int, max_pages: int, dtype=None):
+    """Paged decode cache (serving scheduler): pooled wire-word KV pages
+    + per-sequence block tables. Attention-only families — anything
+    else (encdec included) is rejected by
+    ``transformer.init_paged_cache`` via ``paged_supported``."""
+    return transformer.init_paged_cache(cfg, batch, num_pages, page_size,
+                                        max_pages, dtype)
 
 
 def prefill(params, tokens, cfg: ModelConfig, cache, *, media=None):

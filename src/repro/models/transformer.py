@@ -339,6 +339,69 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Whether ``cfg``'s layer plan can run on the paged KV cache.
+
+    Paging applies to attention state only: every block must be a
+    ``self``/``moe`` attention block. Recurrent families (rwkv6, hybrid
+    rglru) carry O(1)-per-sequence state — there is nothing to page —
+    and cross-attention / encdec layers hold position-independent or
+    encoder state outside the paged pool's layout.
+    """
+    if cfg.family == "encdec":
+        return False
+    return all(kind in ("self", "moe")
+               for pat, _ in layer_plan(cfg) for kind in pat)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int, max_pages: int, dtype=None) -> list:
+    """Paged decode cache: one ``[num_pages, page_size, Hkv, hd]``
+    wire-word pool per layer (stacked per scan group, like
+    :func:`init_cache`) plus per-sequence block tables.
+
+    Unlike the contiguous cache there is no batch dimension on K/V —
+    capacity is the *pool*, shared by whoever is scheduled: ``table``
+    ``[batch, max_pages]`` maps each decode-batch slot's kk-th KV block
+    to a page, ``pos``/``start`` are per-slot vectors. Page 0 is
+    reserved by the allocator (``serve.paged.PagePool``) as the scratch
+    page idle slots point at. The table/pos/start leaves are replicated
+    per layer so the stacked cache scans homogeneously; the serving
+    layer keeps them in sync across layers.
+    """
+    dtype = DTYPES[cfg.dtype] if dtype is None else dtype
+    if not paged_supported(cfg):
+        raise ValueError(
+            f"paged KV cache requires an attention-only layer plan; "
+            f"family {cfg.family!r} has non-attention state (use the "
+            "contiguous init_cache)")
+    from repro import formats
+    kv_spec = formats.resolve(cfg.kv_quant)
+    kv_dtype = kv_spec.word_dtype or dtype
+    caches = []
+    for pat, n_rep in layer_plan(cfg):
+        def one_cache():
+            c = {}
+            for i, _kind in enumerate(pat):
+                c[f"b{i}"] = {"attn": {
+                    "k": jnp.zeros((num_pages, page_size, cfg.n_kv_heads,
+                                    cfg.hd), kv_dtype),
+                    "v": jnp.zeros((num_pages, page_size, cfg.n_kv_heads,
+                                    cfg.hd), kv_dtype),
+                    "table": jnp.zeros((batch, max_pages), jnp.int32),
+                    "pos": jnp.zeros((batch,), jnp.int32),
+                    "start": jnp.zeros((batch,), jnp.int32),
+                }}
+            return c
+
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_rep,) + x.shape).copy()
+            if hasattr(x, "shape") else x,
+            one_cache())
+        caches.append(stacked)
+    return caches
+
+
 def forward_cached(params, tokens, cfg: ModelConfig, caches, *, pos,
                    media=None, last_only: bool = False):
     """Prefill (T > 1) or decode (T == 1) with state. Returns

@@ -1,18 +1,31 @@
-"""Batched serving engine: bucketed prefill + jitted decode loop.
+"""Batched serving engine: continuous batching over the paged KV pool,
+with the lockstep bucketed-prefill + jitted-decode loop retained.
+
+Two serving modes share the compiled prefill/step executables:
+
+* **Continuous batching** (``submit``/``run``, and ``generate`` when it
+  applies): requests stream through a fixed-width decode batch over the
+  paged takum-wire KV pool (``repro.serve.paged`` /
+  ``repro.serve.scheduler``) — admission whenever pages free up,
+  per-request prefill interleaved with decode, pages released the step
+  a sequence finishes. This is where ``cfg.kv_quant`` compression
+  becomes *capacity*: takum8 pages fit 4x the concurrent sequences of
+  an f32 cache in the same HBM.
+* **Lockstep** (``generate_lockstep``): one left-padded batch decodes
+  until the slowest sequence finishes — the static-shape baseline the
+  scheduler is measured against, and the fallback for everything the
+  paged path does not cover (recurrent/encdec families, temperature
+  sampling, media prompts).
 
 Supports greedy and temperature sampling, per-sequence stop conditions,
 takum-quantised KV caches (``cfg.kv_quant``) and takum weight-only
-quantisation (``quantize_weights``). Throughput-oriented: one compiled
-decode step for the whole batch; finished sequences keep decoding into a
-scratch slot until the batch drains (static shapes — the standard
-fixed-batch serving pattern; continuous batching swaps finished slots
-between compiled steps).
+quantisation (``quantize_weights``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +34,14 @@ import numpy as np
 from repro.configs.base import ModelConfig, parse_kv_quant
 from repro.models import model
 
-__all__ = ["ServeEngine", "quantize_weights"]
+__all__ = ["ServeEngine", "quantize_weights", "CACHE_SLACK"]
+
+# Lockstep cache headroom beyond ``prompt + max_new`` positions: the
+# pipelined decode loop launches one step beyond the EOS break (its
+# append lands at position ``plen + max_new - 1`` plus the speculative
+# step), and recurrent families round the prompt up before the cache is
+# sized. 8 covers both without a measurable HBM cost.
+CACHE_SLACK = 8
 
 
 _DEFAULT_SKIP = ("embed", "unembed", "scale", "norm")
@@ -139,16 +159,22 @@ def quantize_weights(params, fmt: str = "takum8", *,
 class ServeEngine:
     params: object
     cfg: ModelConfig
-    max_len: int
+    max_len: int              # per-sequence KV position cap (paged mode)
     temperature: float = 0.0
     eos_id: int = -1          # -1: never stop early
     seed: int = 0
     kv_block: Optional[int] = None  # fused-attention KV tile override
+    # continuous-batching knobs (submit/run and scheduler-routed generate)
+    page_size: Optional[int] = None   # None -> kv_block or the kernel tile
+    num_pages: Optional[int] = None   # None -> decode_batch full sequences
+    decode_batch: int = 8             # packed decode width (slots)
 
     def __post_init__(self):
         parse_kv_quant(self.cfg.kv_quant)  # reject typos before compiling
         if self.kv_block:
             self.cfg = dataclasses.replace(self.cfg, kv_block=self.kv_block)
+        self._sched = None
+        self._sched_key = None
         cfg = self.cfg
 
         def _prefill(params, tokens, cache, media):
@@ -166,8 +192,140 @@ class ServeEngine:
         self._prefill = jax.jit(_prefill)
         self._step = jax.jit(_step)
 
+    # -- continuous batching (paged KV pool + scheduler) -------------------
+
+    def scheduler(self, *, page_size: Optional[int] = None,
+                  num_pages: Optional[int] = None,
+                  decode_batch: Optional[int] = None,
+                  max_pages: Optional[int] = None):
+        """The engine's continuous-batching scheduler (built lazily,
+        reused while its sizing matches and requests are pending).
+
+        Defaults: ``page_size`` = the fused kernel's KV tile
+        (``kv_block`` or ``DEFAULT_BK``), ``max_pages`` =
+        ``ceil(max_len / page_size)`` (the per-sequence cap),
+        ``num_pages`` = enough for ``decode_batch`` full-length
+        sequences plus the reserved scratch page.
+        """
+        from repro.kernels.takum_attention import DEFAULT_BK
+        from repro.serve.paged import pages_for
+        from repro.serve.scheduler import Scheduler
+        if (self._sched is not None and page_size is None
+                and num_pages is None and decode_batch is None
+                and max_pages is None):
+            # the no-argument call means "the engine's scheduler", not a
+            # resize back to the construction defaults
+            return self._sched
+        ps = page_size or self.page_size or self.cfg.kv_block or DEFAULT_BK
+        db = decode_batch or self.decode_batch
+        mp = max_pages or max(pages_for(self.max_len, ps), 1)
+        npg = num_pages or self.num_pages or (db * mp + 1)
+        key = (ps, mp, npg, db)
+        if self._sched is not None:
+            if self._sched_key == key:
+                return self._sched
+            if self._sched.pending():
+                raise RuntimeError(
+                    "cannot resize the scheduler while requests are "
+                    f"pending (current {self._sched_key}, wanted {key})")
+        prev = self._sched
+        self._sched = Scheduler(self, page_size=ps, max_pages=mp,
+                                num_pages=npg, decode_batch=db)
+        if prev is not None:
+            # a resize must not lose finished results or reuse rids
+            self._sched.adopt_finished(prev)
+        self._sched_key = key
+        return self._sched
+
+    def submit(self, prompt: List[int], max_new: int,
+               eos_id: Optional[int] = None) -> int:
+        """Enqueue one request on the paged scheduler; returns a request
+        id for :meth:`run`'s stream events and :meth:`result`. Raises
+        ``repro.serve.paged.AdmissionError`` (naming the KV format and
+        the page budget) when the request can never fit the pool."""
+        return self.scheduler().submit(prompt, max_new, eos_id=eos_id)
+
+    def run(self) -> Iterator["StreamEvent"]:  # noqa: F821 (docs name)
+        """Serve every submitted request to completion, streaming
+        ``StreamEvent(rid, token, done)`` per generated token."""
+        yield from self.scheduler().run()
+
+    def result(self, rid: int) -> List[int]:
+        """Finished request's prompt + generated tokens (retained until
+        :meth:`forget`)."""
+        return self.scheduler().result(rid)
+
+    def forget(self, rid: int) -> None:
+        """Drop a finished request's record — long-lived serving loops
+        call this after reading the result so host memory stays
+        bounded."""
+        self.scheduler().forget(rid)
+
+    def _can_schedule(self, media) -> bool:
+        """Whether ``generate`` can route through the paged scheduler:
+        attention-only layer plan, greedy decoding (continuous-batch
+        sampling order is schedule-dependent — the lockstep key
+        schedule is the pinned behaviour at temperature > 0), and no
+        media prompt."""
+        from repro.models.transformer import paged_supported
+        return (media is None and self.temperature == 0.0
+                and paged_supported(self.cfg))
+
     def generate(self, prompts: List[List[int]], max_new: int,
                  media: Optional[np.ndarray] = None) -> List[List[int]]:
+        """Generate ``max_new`` tokens per prompt (prompt + generation
+        returned, lockstep-compatible shapes and stop conditions).
+
+        Routed through the continuous-batching scheduler whenever it
+        applies (:meth:`_can_schedule`): requests are submitted
+        individually and served through the paged takum-wire KV pool —
+        admission as pages free up, per-request page-aligned prefill, no
+        cross-request padding, pages released at EOS. Falls back to
+        :meth:`generate_lockstep` (the original static-batch loop) for
+        recurrent/encdec families, temperature sampling, and media
+        prompts.
+        """
+        if not self._can_schedule(media):
+            return self.generate_lockstep(prompts, max_new, media=media)
+        if self._sched is not None and self._sched.pending():
+            # submit()ed requests are in flight: draining them here
+            # would consume the stream their owner reads from run()
+            # (or force a refused resize) — serve this call lockstep
+            return self.generate_lockstep(prompts, max_new, media=media)
+        from repro.kernels.takum_attention import DEFAULT_BK
+        from repro.serve.paged import pages_for
+        # pool sizing must not depend on *this call's* prompts — prompt
+        # buckets (and so left-pad offsets) would shift between a
+        # batched call and its solo replay, which changes what a wire
+        # cache quantises. Derive everything from engine fields: the
+        # page size (clamped to the engine's per-sequence cap so toy
+        # max_len engines compile small pools) and a table wide enough
+        # for a full-length prompt plus this call's growth.
+        ps = self.page_size or self.cfg.kv_block or DEFAULT_BK
+        ps = min(ps, max(8, -(-self.max_len // 8) * 8))
+        bucket_max = max(-(-len(p) // ps) * ps for p in prompts)
+        cap = max(-(-self.max_len // ps) * ps, bucket_max) + max_new - 1
+        mp = pages_for(cap, ps)
+        sched = self.scheduler(page_size=ps, max_pages=mp,
+                               num_pages=self.num_pages
+                               or (self.decode_batch * mp + 1))
+        rids = [sched.submit(p, max_new) for p in prompts]
+        for _ in sched.run():
+            pass
+        outs = [sched.result(r) for r in rids]
+        for r in rids:                  # keep host memory bounded
+            sched.forget(r)
+        return outs
+
+    # -- lockstep (static batch) -------------------------------------------
+
+    def generate_lockstep(self, prompts: List[List[int]], max_new: int,
+                          media: Optional[np.ndarray] = None
+                          ) -> List[List[int]]:
+        """The static-batch loop: prompts left-padded to one length,
+        decode until every sequence finishes. Baseline for the
+        scheduler's parity pins and the path for families/sampling the
+        paged pool does not cover."""
         cfg = self.cfg
         b = len(prompts)
         plen = max(len(p) for p in prompts)
@@ -184,7 +342,7 @@ class ServeEngine:
         # for rwkv6/hybrid)
         use_start = cfg.family not in ("rwkv6", "hybrid_rglru") and \
             start.any()
-        max_len = plen + max_new + 8
+        max_len = plen + max_new + CACHE_SLACK
         from repro.kernels.ops import interpret_default
         from repro.models.layers import KV_ATTN_KERNEL
         if (KV_ATTN_KERNEL if KV_ATTN_KERNEL is not None
@@ -216,16 +374,22 @@ class ServeEngine:
             tok = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)[:, None]
         out = [list(p) for p in prompts]
         done = np.zeros(b, bool)
+        temp_arr = jnp.asarray(max(self.temperature, 1e-6))
         for s in range(max_new):
+            # launch step s+1 *before* reading step s's token back: the
+            # host-side append/EOS check runs one step stale, so the
+            # device dispatch pipeline never drains on the per-token
+            # sync (the break below discards the speculative step;
+            # CACHE_SLACK covers its cache append)
+            key, sub = jax.random.split(key)
+            nxt, cache = self._step(self.params, tok, cache,
+                                    jnp.asarray(plen + s), sub, temp_arr)
+            tok_host = np.asarray(tok)
             for i in range(b):
                 if not done[i]:
-                    out[i].append(int(tok[i, 0]))
-            done |= np.asarray(tok[:, 0]) == self.eos_id
+                    out[i].append(int(tok_host[i, 0]))
+            done |= tok_host[:, 0] == self.eos_id
             if done.all():
                 break
-            key, sub = jax.random.split(key)
-            tok, cache = self._step(self.params, tok, cache,
-                                    jnp.asarray(plen + s), sub,
-                                    jnp.asarray(max(self.temperature,
-                                                    1e-6)))
+            tok = nxt
         return out

@@ -1,0 +1,270 @@
+"""Paged takum-wire KV pool: free-list allocator + per-sequence block
+tables over the pooled cache of ``transformer.init_paged_cache``.
+
+The contiguous serving cache allocates ``batch x max_len`` KV slots up
+front, so every sequence pays ``max(prompt) + max_new`` whether it uses
+them or not. The :class:`PagePool` instead owns one
+``[num_pages, page_size, Hkv, hd]`` wire-word array per layer (float for
+the identity codec) and hands out *pages* — ``page_size`` consecutive KV
+positions — from a free list. A sequence's pages are glued together by
+its row of the block table (``[batch_slots, max_pages]`` int32 page
+ids), which rides into the paged attention kernel as a scalar-prefetch
+operand. Page size should match the kernel's KV tile
+(``kernels.takum_attention.DEFAULT_BK`` or ``ModelConfig.kv_block``):
+one page = one decode-and-accumulate step of the flash loop.
+
+This is where the codec's compression becomes *capacity*: the pool's
+HBM budget is ``num_pages * page_bytes`` with ``page_bytes`` derived
+from the registry spec's bytes-per-element, so a takum8 pool holds 4x
+the pages of an f32 pool in the same HBM (``hbm_bytes``,
+``docs/serving.md``).
+
+Conventions:
+
+* **Page 0 is reserved** as the scratch page: idle decode-batch slots
+  keep riding the compiled step with ``table`` row 0 / ``pos`` 0, so
+  their garbage writes and reads land on a page no live sequence owns.
+* The allocator is host-side and strict: ``free`` of a page that is not
+  currently allocated (double free, never allocated, the scratch page)
+  raises, and ``alloc`` beyond capacity raises — callers are expected
+  to check :meth:`pages_free` first (the scheduler's admission gate).
+* Recycled pages are **not** zeroed: positions past a sequence's
+  ``pos`` hold stale words from previous owners, and containment comes
+  from the causal mask (see ``ops.paged_attention``), not from
+  zero-fill.
+* The pool also owns the host mirrors of ``table``/``pos``/``start``
+  and pushes them into every layer's cache leaves (:meth:`push_tables`)
+  — only needed when the active set changes (admit/release), since the
+  compiled step advances the device-side ``pos`` itself.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["PagePool", "PagePoolError", "AdmissionError"]
+
+
+class PagePoolError(RuntimeError):
+    """Allocator misuse: double free, foreign page, over-allocation."""
+
+
+class AdmissionError(PagePoolError):
+    """A request can never be admitted under the pool's page budget.
+
+    Raised at ``submit`` time — with the cache format and the page
+    budget in the message — instead of letting an oversized request OOM
+    or index out of bounds inside the compiled step.
+    """
+
+
+def pages_for(positions: int, page_size: int) -> int:
+    """Pages needed to hold ``positions`` KV positions."""
+    return -(-positions // page_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class PageStats:
+    """One snapshot of the allocator (``PagePool.stats()``)."""
+    num_pages: int          # total pages, scratch page included
+    page_size: int
+    free: int
+    in_use: int
+    peak_in_use: int
+    hbm_bytes: int          # whole pool, all layers, K and V
+
+
+class PagePool:
+    """Free-list page allocator + block tables over the pooled KV cache.
+
+    ``batch`` is the decode-batch width (scheduler slots), ``max_pages``
+    the block-table width (pages per sequence cap). With
+    ``alloc_device=False`` no device arrays are built — the allocator
+    and accounting run standalone (property tests, capacity planning).
+    """
+
+    def __init__(self, cfg: ModelConfig, *, batch: int, num_pages: int,
+                 page_size: int, max_pages: int, dtype=None,
+                 alloc_device: bool = True):
+        from repro import formats
+        if num_pages < 2:
+            raise ValueError(f"num_pages must be >= 2 (page 0 is the "
+                             f"reserved scratch page), got {num_pages}")
+        if page_size < 8 or page_size % 8:
+            raise ValueError(f"page_size must be a positive multiple of "
+                             f"8 (kernel tile alignment), got {page_size}")
+        self.cfg = cfg
+        self.spec = formats.resolve(cfg.kv_quant)
+        self.batch = batch
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_pages = max_pages
+        self._dtype = dtype
+        # LIFO free list: hot pages get reused first (page 0 reserved)
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._owned: set = set()
+        self._peak = 0
+        # host mirrors of the per-slot table state (pushed on change)
+        self.table = np.zeros((batch, max_pages), np.int32)
+        self.pos = np.zeros((batch,), np.int32)
+        self.start = np.zeros((batch,), np.int32)
+        self.cache = None
+        if alloc_device:
+            from repro.models import model
+            self.cache = model.init_paged_cache(
+                cfg, batch=batch, num_pages=num_pages, page_size=page_size,
+                max_pages=max_pages, dtype=dtype)
+
+    # -- allocator ---------------------------------------------------------
+
+    def pages_free(self) -> int:
+        """Pages available for admission (scratch page excluded)."""
+        return len(self._free)
+
+    def pages_in_use(self) -> int:
+        return len(self._owned)
+
+    def peak_pages_in_use(self) -> int:
+        """High-water mark of concurrently allocated pages."""
+        return self._peak
+
+    def alloc(self, n: int) -> Tuple[int, ...]:
+        """Take ``n`` pages off the free list (strict: raises if short —
+        admission checks :meth:`pages_free` first)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            raise PagePoolError(
+                f"page pool exhausted: requested {n} pages with "
+                f"{len(self._free)} free "
+                f"(budget {self.num_pages - 1} x {self.page_size} "
+                f"{self.spec.name} KV positions)")
+        pages = tuple(self._free.pop() for _ in range(n))
+        self._owned.update(pages)
+        self._peak = max(self._peak, len(self._owned))
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Return pages to the free list (strict: double frees, the
+        scratch page, and never-allocated ids raise)."""
+        for p in pages:
+            if p not in self._owned:
+                raise PagePoolError(
+                    f"free of page {p} which is not allocated "
+                    f"(double free, scratch page, or foreign id)")
+            self._owned.discard(p)
+            self._free.append(p)
+
+    # -- memory accounting (registry bytes-per-element) --------------------
+
+    def _n_kv_layers(self) -> int:
+        from repro.models.transformer import layer_plan
+        return sum(len(pat) * n_rep for pat, n_rep in layer_plan(self.cfg))
+
+    def page_hbm_bytes(self) -> int:
+        """Bytes one page costs across all layers (K and V), from the
+        registered format's bytes-per-element — the one source of truth
+        shared with ``docs/serving.md``'s capacity math."""
+        cfg = self.cfg
+        from repro.models.transformer import DTYPES
+        dtype = self._dtype or DTYPES[cfg.dtype]
+        per_elem = self.spec.bytes_per_elem(dtype)
+        return (2 * self.page_size * cfg.n_kv_heads * cfg.hd
+                * self._n_kv_layers() * per_elem)
+
+    def hbm_bytes(self) -> int:
+        """Total pool HBM footprint (every layer's K and V pages)."""
+        return self.num_pages * self.page_hbm_bytes()
+
+    def stats(self) -> PageStats:
+        return PageStats(num_pages=self.num_pages, page_size=self.page_size,
+                         free=self.pages_free(), in_use=self.pages_in_use(),
+                         peak_in_use=self._peak,
+                         hbm_bytes=self.hbm_bytes())
+
+    # -- block tables ------------------------------------------------------
+
+    def assign(self, slot: int, pages: Sequence[int], *, pos: int,
+               start: int = 0) -> None:
+        """Point decode-batch ``slot`` at ``pages`` (rest of the row
+        stays on the scratch page) from position ``pos`` onward."""
+        self.table[slot] = 0
+        self.table[slot, :len(pages)] = pages
+        self.pos[slot] = pos
+        self.start[slot] = start
+
+    def clear(self, slot: int) -> None:
+        """Idle a slot: scratch-page table row, pos/start 0."""
+        self.table[slot] = 0
+        self.pos[slot] = 0
+        self.start[slot] = 0
+
+    def advance(self, slots: Sequence[int]) -> None:
+        """Mirror one compiled decode step: the device cache advanced
+        every slot's ``pos`` by 1; track the active ones here (idle
+        slots drift on device — harmless, see the kernel's table
+        clamp — and are resynced by the next :meth:`push_tables`)."""
+        for s in slots:
+            self.pos[s] += 1
+
+    # -- device-cache plumbing --------------------------------------------
+
+    def _attn_nodes(self, caches):
+        """Yield every stacked per-group attention-cache dict."""
+        for group in caches:
+            for bname in sorted(group):
+                node = group[bname]
+                if isinstance(node, dict) and "attn" in node:
+                    yield node["attn"]
+
+    def push_tables(self) -> None:
+        """Install the host ``table``/``pos``/``start`` mirrors into
+        every layer's cache leaves (replicated across the scan dim).
+        Called when the active set changes; between changes the device
+        step keeps ``pos`` advancing on its own."""
+        import jax.numpy as jnp
+        if self.cache is None:
+            raise PagePoolError("pool built with alloc_device=False has "
+                                "no device cache")
+        # snapshot the host mirrors: device_put of a numpy array can be
+        # zero-copy on CPU, and these buffers are mutated in place by
+        # assign/clear/advance — an aliased transfer would let a later
+        # host write race an in-flight async step
+        table = jnp.asarray(self.table.copy())
+        pos = jnp.asarray(self.pos.copy())
+        start = jnp.asarray(self.start.copy())
+        for attn in self._attn_nodes(self.cache):
+            n_rep = attn["table"].shape[0]
+            attn["table"] = jnp.broadcast_to(table, (n_rep,) + table.shape)
+            attn["pos"] = jnp.broadcast_to(pos, (n_rep,) + pos.shape)
+            attn["start"] = jnp.broadcast_to(start, (n_rep,) + start.shape)
+
+    def scatter_prefill(self, contig_caches, pages: Sequence[int]) -> None:
+        """Copy a freshly prefilled *contiguous* single-sequence cache
+        (``model.init_cache(batch=1, max_len=len(pages) * page_size)``)
+        into the pool at ``pages`` — page k of the sequence lands on
+        pool page ``pages[k]``, for every layer."""
+        import jax.numpy as jnp
+        if self.cache is None:
+            raise PagePoolError("pool built with alloc_device=False has "
+                                "no device cache")
+        ps = self.page_size
+        pages_arr = jnp.asarray(np.asarray(pages, np.int32))
+        npg = len(pages)
+        for pool_attn, contig_attn in zip(self._attn_nodes(self.cache),
+                                          self._attn_nodes(contig_caches)):
+            for key in ("k", "v"):
+                src = contig_attn[key]          # (n_rep, 1, T, Hkv, hd)
+                n_rep, b1, t = src.shape[:3]
+                if b1 != 1 or t != npg * ps:
+                    raise ValueError(
+                        f"scatter_prefill expects a batch-1 contiguous "
+                        f"cache of exactly {npg} x {ps} positions, got "
+                        f"{src.shape}")
+                tiles = src[:, 0].reshape((n_rep, npg, ps) + src.shape[3:])
+                pool_attn[key] = pool_attn[key].at[:, pages_arr].set(tiles)

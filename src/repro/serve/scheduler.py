@@ -1,0 +1,312 @@
+"""Continuous-batching scheduler over the paged takum-wire KV pool.
+
+The lockstep engine batches requests once, left-pads every prompt to the
+longest, and decodes until the *last* sequence finishes — finished
+sequences burn decode steps and every sequence pays
+``max(prompt) + max_new`` cache slots. This scheduler instead treats
+serving as a stream:
+
+* **submit** enqueues a request (FIFO) after validating it can ever fit
+  the page budget (:class:`repro.serve.paged.AdmissionError` otherwise —
+  the format name and budget in the message, not an OOM inside jit);
+* **admission** happens whenever the head of the queue fits: a free
+  decode-batch slot *and* enough free pages for its worst case
+  (``ceil((prompt_bucket + max_new - 1) / page_size)`` — reserved up
+  front so a running sequence can never strand mid-decode);
+* **prefill interleaves with decode**: an admitted request is prefilled
+  alone on a page-aligned contiguous cache (left-padded to its bucket,
+  the same start-masked path the lockstep engine uses) and scattered
+  into its pages between two decode steps;
+* **decode packs** all active sequences into one fixed-width compiled
+  step — per-sequence ``pos``/``start`` vectors and the block table ride
+  into the paged attention kernel; idle slots point at the reserved
+  scratch page;
+* **release is immediate**: the step a sequence emits EOS or hits
+  ``max_new``, its pages go back to the free list and its slot admits
+  the next queued request.
+
+Token order within one request is deterministic; *across* requests the
+schedule depends on page availability, so temperature sampling draws
+from the engine key in admission/step order (documented as
+schedule-dependent — greedy decoding is schedule-invariant and is what
+the parity pins use).
+
+Compilation: one decode-step executable per (decode_batch, table-width)
+pool shape, one prefill executable per distinct prompt *bucket* (prompt
+length rounded up to the page size) — the page size is the bucketing
+granularity, so a 256-wide page serves any prompt band with one
+compile.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.paged import AdmissionError, PagePool, pages_for
+
+__all__ = ["Scheduler", "Request", "StreamEvent"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One submitted generation request and its lifecycle state."""
+    rid: int
+    prompt: List[int]
+    max_new: int
+    eos_id: int
+    bucket: int                 # prompt length rounded up to the page size
+    pages_needed: int           # worst-case pages, reserved at admission
+    state: str = "queued"       # queued | active | done
+    generated: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    pages: Tuple[int, ...] = ()
+
+    @property
+    def done(self) -> bool:
+        return self.state == "done"
+
+    def output(self) -> List[int]:
+        """Prompt + generated tokens (the lockstep ``generate`` shape)."""
+        return list(self.prompt) + list(self.generated)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamEvent:
+    """One streamed token: ``done`` marks the request's last token."""
+    rid: int
+    token: int
+    done: bool
+
+
+class Scheduler:
+    """Continuous batching over a :class:`PagePool` for a ``ServeEngine``.
+
+    Construction is cheap except for the pool's device arrays; the
+    engine builds one lazily (``ServeEngine.scheduler()``) and reuses it
+    across ``submit``/``run``/``generate`` calls.
+    """
+
+    def __init__(self, engine, *, page_size: int, max_pages: int,
+                 num_pages: int, decode_batch: int):
+        from repro.models import transformer
+        if not transformer.paged_supported(engine.cfg):
+            raise ValueError(
+                f"continuous batching needs an attention-only layer plan; "
+                f"family {engine.cfg.family!r} has non-attention state "
+                "(use the lockstep ServeEngine.generate)")
+        self.engine = engine
+        self.decode_batch = decode_batch
+        self.page_size = page_size
+        self.pool = PagePool(engine.cfg, batch=decode_batch,
+                             num_pages=num_pages, page_size=page_size,
+                             max_pages=max_pages)
+        self._queue: collections.deque = collections.deque()
+        self._requests: Dict[int, Request] = {}
+        self._slots: List[Optional[Request]] = [None] * decode_batch
+        self._next_rid = 0
+        import jax
+        self._key = jax.random.PRNGKey(engine.seed)
+
+    # -- queueing ----------------------------------------------------------
+
+    def submit(self, prompt: List[int], max_new: int,
+               eos_id: Optional[int] = None) -> int:
+        """Enqueue a request; returns its request id.
+
+        Raises :class:`AdmissionError` immediately when the request can
+        *never* run: its worst-case page count exceeds the pool budget
+        or the block-table width. Requests that merely have to wait for
+        pages stay queued.
+        """
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        ps = self.page_size
+        bucket = -(-len(prompt) // ps) * ps
+        # last KV write lands at bucket + max_new - 2 (the final token is
+        # sampled, never written), so the worst case spans
+        # bucket + max_new - 1 positions
+        needed = pages_for(bucket + max_new - 1, ps)
+        pool = self.pool
+        if needed > pool.max_pages:
+            raise AdmissionError(
+                f"request needs {needed} pages of {ps} "
+                f"({len(prompt)} prompt + {max_new} new tokens) but the "
+                f"block table holds {pool.max_pages} pages/sequence "
+                f"({pool.max_pages * ps} positions) — raise "
+                "ServeEngine.max_len or the page budget")
+        if needed > pool.num_pages - 1:
+            raise AdmissionError(
+                f"request needs {needed} pages of {ps} "
+                f"({len(prompt)} prompt + {max_new} new tokens) but the "
+                f"{pool.spec.name} pool budget is {pool.num_pages - 1} "
+                f"allocatable pages ({pool.hbm_bytes()} HBM bytes) — "
+                "raise num_pages or shorten the request")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt, max_new=max_new,
+                      eos_id=self.engine.eos_id if eos_id is None else eos_id,
+                      bucket=bucket, pages_needed=needed)
+        self._requests[rid] = req
+        self._queue.append(req)
+        return rid
+
+    def result(self, rid: int) -> List[int]:
+        """Finished request's prompt + generated tokens. Records are
+        retained until :meth:`forget` — long-lived serving loops should
+        forget after reading so host memory stays bounded."""
+        if rid not in self._requests:
+            raise KeyError(f"unknown or forgotten request id {rid}")
+        req = self._requests[rid]
+        if not req.done:
+            raise ValueError(f"request {rid} is {req.state}, not done")
+        return req.output()
+
+    def forget(self, rid: int) -> None:
+        """Drop a finished request's record (no-op while it is queued
+        or active)."""
+        req = self._requests.get(rid)
+        if req is not None and req.done:
+            del self._requests[rid]
+
+    def adopt_finished(self, other: "Scheduler") -> None:
+        """Carry another (idle) scheduler's finished records and rid
+        counter over — a pool resize must not lose retrievable results
+        or reuse request ids."""
+        self._requests.update(
+            {r: q for r, q in other._requests.items() if q.done})
+        self._next_rid = max(self._next_rid, other._next_rid)
+
+    def pending(self) -> int:
+        """Requests not yet finished (queued or active)."""
+        return sum(1 for r in self._requests.values() if not r.done)
+
+    # -- the serving loop --------------------------------------------------
+
+    def run(self) -> Iterator[StreamEvent]:
+        """Drive the schedule until queue and batch drain, streaming
+        every generated token as a :class:`StreamEvent`."""
+        while self._queue or any(s is not None for s in self._slots):
+            yield from self._admit()
+            yield from self._decode_step()
+
+    def _sample(self, logits):
+        """One token from [B, V] logits under the engine's policy (the
+        same argmax/categorical split as the lockstep loop; scheduler
+        sampling order is schedule-dependent, see module docstring)."""
+        import jax
+        import jax.numpy as jnp
+        temp = self.engine.temperature
+        if temp > 0.0:
+            self._key, sub = jax.random.split(self._key)
+            return jax.random.categorical(sub, logits / temp, axis=-1)
+        return jnp.argmax(logits, axis=-1)
+
+    def _admit(self) -> Iterator[StreamEvent]:
+        """Admit queued requests while a slot and their pages are free:
+        prefill alone on a page-aligned contiguous cache, scatter into
+        the pool, install the block table.
+
+        Events are buffered and yielded only after ``push_tables`` has
+        committed the new device state: a consumer that abandons the
+        stream mid-yield must never leave host bookkeeping ahead of the
+        device cache."""
+        import jax.numpy as jnp
+        from repro.models import model
+        eng = self.engine
+        events = []
+        while self._queue:
+            req = self._queue[0]
+            slot = next((i for i, s in enumerate(self._slots) if s is None),
+                        None)
+            if slot is None or self.pool.pages_free() < req.pages_needed:
+                break
+            self._queue.popleft()
+            pages = self.pool.alloc(req.pages_needed)
+            plen = len(req.prompt)
+            start_off = req.bucket - plen
+            prompt = np.zeros((1, req.bucket), np.int32)
+            prompt[0, start_off:] = req.prompt
+            contig = model.init_cache(
+                eng.cfg, batch=1, max_len=req.bucket,
+                start=np.asarray([start_off], np.int32) if start_off
+                else None)
+            logits, contig = eng._prefill(eng.params, jnp.asarray(prompt),
+                                          contig, None)
+            tok0 = int(np.asarray(self._sample(logits))[0])
+            self.pool.scatter_prefill(contig,
+                                      pages[:req.bucket // self.page_size])
+            req.state = "active"
+            req.slot, req.pages = slot, pages
+            req.generated.append(tok0)
+            self._slots[slot] = req
+            self.pool.assign(slot, pages, pos=req.bucket, start=start_off)
+            done = tok0 == req.eos_id or len(req.generated) >= req.max_new
+            if done:
+                self._release(req)
+            events.append(StreamEvent(req.rid, tok0, done))
+        if events:
+            self.pool.push_tables()
+        yield from events
+
+    def _decode_step(self) -> Iterator[StreamEvent]:
+        """One compiled step for every active slot; release finished
+        sequences' pages the same step."""
+        import jax
+        import jax.numpy as jnp
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return
+        eng = self.engine
+        tok = np.zeros((self.decode_batch, 1), np.int32)
+        for i in active:
+            tok[i, 0] = self._slots[i].generated[-1]
+        # snapshot pos: the pool mutates its host mirror in place right
+        # after dispatch (advance), and a zero-copy transfer would alias
+        pos = jnp.asarray(self.pool.pos[:, None].copy())  # (W, 1) RoPE
+        if eng.temperature > 0.0:
+            self._key, sub = jax.random.split(self._key)
+        else:
+            sub = self._key
+        tok_next, cache = eng._step(
+            eng.params, jnp.asarray(tok), self.pool.cache, pos, sub,
+            jnp.asarray(max(eng.temperature, 1e-6)))
+        self.pool.cache = cache
+        self.pool.advance(active)
+        # this read blocks on the step just dispatched — the deliberate
+        # price of *same-step* page release and admission (the whole
+        # point of the paged pool); the lockstep loop, which never
+        # releases mid-batch, pipelines with a one-step-stale read
+        # instead (engine.generate_lockstep)
+        toks = np.asarray(tok_next)
+        events = []
+        released = False
+        for i in active:
+            req = self._slots[i]
+            t = int(toks[i, 0])
+            req.generated.append(t)
+            done = t == req.eos_id or len(req.generated) >= req.max_new
+            if done:
+                self._release(req)
+                released = True
+            events.append(StreamEvent(req.rid, t, done))
+        if released:
+            # commit the cleared slots before any yield: an abandoned
+            # stream must not resume with freed (and possibly
+            # reallocated) pages still installed on the device
+            self.pool.push_tables()
+        yield from events
+
+    def _release(self, req: Request) -> None:
+        """Return the request's pages and slot the step it finishes."""
+        self.pool.free(req.pages)
+        if req.slot >= 0:
+            self.pool.clear(req.slot)
+            self._slots[req.slot] = None
+        req.state = "done"

@@ -1,0 +1,162 @@
+"""PagePool allocator properties + accounting, no device arrays needed.
+
+The allocator is the only stateful host-side piece of the paged serving
+subsystem, so it gets property coverage: under a random request schedule
+(interleaved allocs and frees) the free list and the owned set must stay
+an exact partition of the non-reserved pages — no leak, no double
+hand-out — and misuse (double free, foreign page, scratch page,
+over-allocation) must raise instead of corrupting state.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from hypcompat import given, settings, st
+
+from repro.configs import get_arch
+from repro.serve.paged import AdmissionError, PagePool, PagePoolError, \
+    pages_for
+
+
+def _pool(num_pages=9, page_size=8, batch=4, max_pages=4, kv_quant="takum8"):
+    cfg = dataclasses.replace(get_arch("phi3-medium-14b").reduced,
+                              kv_quant=kv_quant)
+    return PagePool(cfg, batch=batch, num_pages=num_pages,
+                    page_size=page_size, max_pages=max_pages,
+                    alloc_device=False)
+
+
+# ---------------------------------------------------------------------------
+# property: random alloc/free schedules keep the pool consistent
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(num_pages=st.integers(2, 24),
+       schedule=st.lists(st.tuples(st.integers(0, 5), st.integers(0, 7)),
+                         min_size=1, max_size=40))
+def test_alloc_free_round_trip_under_random_schedule(num_pages, schedule):
+    """(op, arg) schedule: op<=3 allocs `arg` pages (when they fit),
+    otherwise frees a pseudo-randomly chosen outstanding allocation.
+    Invariants: free + in_use == num_pages - 1 at every step, no page is
+    ever handed out twice, and draining returns the pool to full."""
+    pool = _pool(num_pages=num_pages)
+    outstanding = []
+    seen_live = set()
+    for i, (op, arg) in enumerate(schedule):
+        if op <= 3:
+            n = min(arg, pool.pages_free())
+            pages = pool.alloc(n)
+            assert len(pages) == n and len(set(pages)) == n
+            assert not (set(pages) & seen_live), "page handed out twice"
+            assert 0 not in pages, "scratch page must never be allocated"
+            seen_live.update(pages)
+            if pages:
+                outstanding.append(pages)
+        elif outstanding:
+            pages = outstanding.pop(arg % len(outstanding))
+            pool.free(pages)
+            seen_live.difference_update(pages)
+        assert pool.pages_free() + pool.pages_in_use() == num_pages - 1
+        assert pool.pages_in_use() == len(seen_live)
+    for pages in outstanding:
+        pool.free(pages)
+    assert pool.pages_free() == num_pages - 1, "leak: pool did not refill"
+    assert pool.pages_in_use() == 0
+
+
+def test_double_free_and_foreign_pages_raise():
+    pool = _pool()
+    pages = pool.alloc(3)
+    pool.free(pages)
+    with pytest.raises(PagePoolError, match="not allocated"):
+        pool.free(pages)          # double free
+    with pytest.raises(PagePoolError, match="not allocated"):
+        pool.free([0])            # the reserved scratch page
+    with pytest.raises(PagePoolError, match="not allocated"):
+        pool.free([10_000])       # never existed
+
+
+def test_over_allocation_raises_with_budget():
+    pool = _pool(num_pages=4)
+    with pytest.raises(PagePoolError, match="takum8"):
+        pool.alloc(4)             # only 3 allocatable (page 0 reserved)
+    assert pool.pages_free() == 3, "failed alloc must not consume pages"
+
+
+def test_peak_tracks_high_water_mark():
+    pool = _pool(num_pages=9)
+    a = pool.alloc(5)
+    pool.free(a[:4])
+    pool.alloc(2)
+    assert pool.pages_in_use() == 3
+    assert pool.peak_pages_in_use() == 5
+
+
+# ---------------------------------------------------------------------------
+# accounting: bytes derive from the registry spec
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_quant,bytes_per", [
+    ("takum8", 1), ("takum16", 2), ("posit8", 1), ("lns-takum16", 2),
+])
+def test_hbm_bytes_from_registry_spec(kv_quant, bytes_per):
+    pool = _pool(kv_quant=kv_quant)
+    cfg = pool.cfg
+    want_page = (2 * pool.page_size * cfg.n_kv_heads * cfg.hd
+                 * cfg.n_layers * bytes_per)
+    assert pool.page_hbm_bytes() == want_page
+    assert pool.hbm_bytes() == pool.num_pages * want_page
+
+
+def test_identity_codec_bytes_follow_dtype():
+    pool = _pool(kv_quant="none")   # reduced phi3 runs f32 activations
+    cfg = pool.cfg
+    assert pool.page_hbm_bytes() == (2 * pool.page_size * cfg.n_kv_heads
+                                     * cfg.hd * cfg.n_layers * 4)
+
+
+def test_takum8_pool_is_quarter_of_f32_same_budget():
+    # the motivating capacity claim: same HBM budget -> 4x the pages
+    f32 = _pool(kv_quant="none")
+    t8 = _pool(kv_quant="takum8")
+    assert f32.hbm_bytes() == 4 * t8.hbm_bytes()
+
+
+def test_pages_for():
+    assert pages_for(1, 8) == 1
+    assert pages_for(8, 8) == 1
+    assert pages_for(9, 8) == 2
+    assert pages_for(0, 8) == 0
+
+
+def test_pool_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="num_pages"):
+        _pool(num_pages=1)
+    with pytest.raises(ValueError, match="page_size"):
+        _pool(page_size=12)
+
+
+# ---------------------------------------------------------------------------
+# engine admission error names the format and the budget
+# ---------------------------------------------------------------------------
+
+
+def test_engine_admission_error_names_format_and_budget():
+    import jax
+    from repro.models import model
+    from repro.serve.engine import ServeEngine
+
+    cfg = dataclasses.replace(get_arch("phi3-medium-14b").reduced,
+                              kv_quant="takum8")
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, max_len=64, page_size=8, num_pages=3)
+    # needs ceil((16 + 32 - 1) / 8) = 6 pages; only 2 allocatable
+    with pytest.raises(AdmissionError, match=r"takum8.*2 allocatable"):
+        eng.submit(list(range(16)), max_new=32)
+    # request longer than the block table can ever hold
+    with pytest.raises(AdmissionError, match="block table"):
+        eng.submit(list(range(16)), max_new=1000)

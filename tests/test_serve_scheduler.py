@@ -1,0 +1,224 @@
+"""Continuous-batching scheduler vs lockstep: parity pins + acceptance.
+
+The scheduler must reproduce lockstep ``generate`` token-for-token at
+temperature 0. Exact parity with a *wire* KV cache needs matching
+left-pad offsets (encoding happens after RoPE rotation, so a coarse
+format quantises differently at shifted positions): with
+``page_size == max(prompt lengths)`` every scheduler bucket equals the
+lockstep pad width and the two paths see bit-identical caches. The pins
+below are built that way; CI runs this module under both
+``REPRO_KV_ATTN_KERNEL=0`` and ``=1`` so the oracle and interpret-kernel
+dispatch paths both stay gated.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_arch
+from repro.models import model
+from repro.serve.engine import ServeEngine
+
+MAXP = 16                       # longest prompt == page size (see above)
+PLENS = (16, 9, 4, 13)
+
+
+@pytest.fixture(scope="module")
+def base_cfg():
+    return get_arch("phi3-medium-14b").reduced
+
+
+@pytest.fixture(scope="module")
+def params(base_cfg):
+    return model.init(jax.random.PRNGKey(0), base_cfg)
+
+
+def _prompts(cfg, lens=PLENS, seed=3):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(0, cfg.vocab, n)) for n in lens]
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("max_len", 48)
+    kw.setdefault("page_size", MAXP)
+    return ServeEngine(params, cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the parity pin: scheduler == lockstep, every format, both dispatch paths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["oracle", "kernel"])
+@pytest.mark.parametrize("kv_quant",
+                         ["takum8", "lns-takum16", "posit8", "none"])
+def test_scheduler_matches_lockstep(base_cfg, params, kv_quant, use_kernel,
+                                    monkeypatch):
+    from repro.models import layers as L
+    monkeypatch.setattr(L, "KV_ATTN_KERNEL", use_kernel)
+    cfg = dataclasses.replace(base_cfg, kv_quant=kv_quant)
+    prompts = _prompts(cfg)
+    eng = _engine(params, cfg)
+    lock = eng.generate_lockstep(prompts, max_new=4)
+    sched = eng.generate(prompts, max_new=4)
+    assert sched == lock, (kv_quant, use_kernel)
+
+
+# ---------------------------------------------------------------------------
+# streaming API
+# ---------------------------------------------------------------------------
+
+
+def test_submit_run_streams_tokens_in_request_order(base_cfg, params):
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    prompts = _prompts(cfg)
+    eng = _engine(params, cfg, decode_batch=2)
+    rids = [eng.submit(p, 3) for p in prompts]
+    streamed = {r: [] for r in rids}
+    done_seen = set()
+    for ev in eng.run():
+        assert ev.rid not in done_seen, "token after done"
+        streamed[ev.rid].append(ev.token)
+        if ev.done:
+            done_seen.add(ev.rid)
+    assert done_seen == set(rids)
+    for r, p in zip(rids, prompts):
+        assert eng.result(r) == p + streamed[r]
+        assert len(streamed[r]) == 3
+    # streaming equals batch generate on a fresh identical engine
+    outs = _engine(params, cfg, decode_batch=2).generate(prompts, 3)
+    assert [eng.result(r) for r in rids] == outs
+
+
+def test_abandoned_stream_resumes_consistently(base_cfg, params):
+    """Breaking out of run() mid-stream and resuming must not desync
+    host bookkeeping from the device cache: the device tables are
+    committed before any event is yielded."""
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    prompts = _prompts(cfg)
+    eng = _engine(params, cfg, decode_batch=2)
+    want = _engine(params, cfg, decode_batch=2).generate(prompts, 4)
+    rids = [eng.submit(p, 4) for p in prompts]
+    for _ in eng.run():                 # abandon after the first event
+        break
+    for _ in eng.run():                 # and again mid-decode
+        break
+    for _ in eng.run():                 # then drain
+        pass
+    assert [eng.result(r) for r in rids] == want
+    pool = eng.scheduler().pool
+    assert pool.pages_in_use() == 0
+
+
+def test_results_survive_scheduler_resize_and_forget(base_cfg, params):
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    prompts = _prompts(cfg)
+    eng = _engine(params, cfg)
+    rid = eng.submit(prompts[0], 3)
+    for _ in eng.run():
+        pass
+    got = eng.result(rid)
+    # generate() resizes the pool (different max_pages key) — the
+    # finished record must survive, and new rids must not collide
+    outs = eng.generate(prompts, max_new=4)
+    assert eng.result(rid) == got
+    assert len(outs) == len(prompts)
+    eng.forget(rid)
+    with pytest.raises(KeyError, match="forgotten"):
+        eng.result(rid)
+
+
+def test_generate_never_drains_pending_submits(base_cfg, params):
+    """generate() while submit()ed requests are in flight must serve
+    the call lockstep instead of consuming (or resizing away) the
+    pending stream."""
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    prompts = _prompts(cfg)
+    eng = _engine(params, cfg)
+    rid = eng.submit(prompts[0], 3)
+    out = eng.generate([prompts[1]], max_new=2)     # lockstep fallback
+    assert len(out[0]) == len(prompts[1]) + 2
+    assert eng.scheduler().pending() == 1, "pending submit was drained"
+    streamed = [ev for ev in eng.run()]
+    assert [ev.rid for ev in streamed] == [rid] * 3
+    assert eng.result(rid)[-3:] == [ev.token for ev in streamed]
+
+
+def test_page_pressure_queues_and_completes(base_cfg, params):
+    """num_pages too small for every request at once: admission must
+    wait for released pages, and results still match the unconstrained
+    schedule."""
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    prompts = _prompts(cfg)
+    # each request needs pages_for(16 + 3, 16) = 2 pages; 5 allocatable
+    # pages admit at most 2 requests concurrently
+    eng = _engine(params, cfg, num_pages=6, decode_batch=8)
+    want = _engine(params, cfg).generate(prompts, max_new=4)
+    got = eng.generate(prompts, max_new=4)
+    assert got == want
+    pool = eng.scheduler().pool
+    assert pool.peak_pages_in_use() <= 5 - 1, \
+        "admission must respect the page budget"
+    assert pool.pages_free() == 5
+
+
+# ---------------------------------------------------------------------------
+# fallbacks
+# ---------------------------------------------------------------------------
+
+
+def test_non_attention_family_and_sampling_fall_back(base_cfg, params):
+    eng = _engine(params, base_cfg, temperature=0.7)
+    assert not eng._can_schedule(None)          # sampling -> lockstep
+    rk = get_arch("rwkv6-1.6b").reduced
+    rk_params = model.init(jax.random.PRNGKey(0), rk)
+    ek = ServeEngine(rk_params, rk, max_len=80)
+    assert not ek._can_schedule(None)           # recurrent state -> lockstep
+    with pytest.raises(ValueError, match="attention-only"):
+        ek.scheduler()
+
+
+# ---------------------------------------------------------------------------
+# the acceptance pin: >= 8 staggered unequal requests, early EOS, takum8
+# ---------------------------------------------------------------------------
+
+
+def test_staggered_requests_with_early_eos_acceptance(base_cfg, params):
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    lens = (16, 3, 9, 12, 5, 16, 7, 14)        # unequal, max == page size
+    prompts = _prompts(cfg, lens=lens, seed=11)
+    max_new = 6
+
+    # find a token some request emits mid-generation, and use it as EOS
+    # so both paths stop that request early
+    probe = _engine(params, cfg, decode_batch=4)
+    free_run = probe.generate(prompts, max_new)
+    mid = [o[len(p) + 1:-1] for o, p in zip(free_run, prompts)]
+    eos = next(t for seq in mid for t in seq)
+
+    eng = _engine(params, cfg, decode_batch=4, eos_id=eos)
+    lock = eng.generate_lockstep(prompts, max_new)
+    sched = eng.generate(prompts, max_new)
+    assert sched == lock, "paged schedule must be token-identical"
+    gen_lens = [len(o) - len(p) for o, p in zip(sched, prompts)]
+    assert any(n < max_new for n in gen_lens), "no early EOS exercised"
+
+    pool = eng.scheduler().pool
+    ps = pool.page_size
+    # every page is back on the free list once the queue drains
+    assert pool.pages_free() == pool.num_pages - 1
+    assert pool.pages_in_use() == 0
+    # and peak concurrent usage beat the contiguous equivalent: a
+    # lockstep cache holds all 8 sequences at max(plen) + max_new +
+    # slack positions for the whole run
+    from repro.serve.engine import CACHE_SLACK
+    from repro.serve.paged import pages_for
+    contiguous_pages = len(prompts) * pages_for(
+        max(lens) + max_new + CACHE_SLACK, ps)
+    assert pool.peak_pages_in_use() < contiguous_pages, \
+        (pool.peak_pages_in_use(), contiguous_pages)
+    # staggering really happened: 8 requests over 4 slots
+    assert len(prompts) > eng.decode_batch
