@@ -4,7 +4,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: check test kernel-parity docs bench bench-json bench-smoke \
-	serve-gate dist-selftest
+	autotune serve-gate dist-selftest
 
 # tier-1 tests + interpret-mode kernel parity + doc-snippet smoke + the
 # CI-sized bench schema gate + both dispatch paths of the paged serving
@@ -46,9 +46,19 @@ bench-json:
 	$(PY) -m benchmarks.run --only codec_json
 
 # CI-sized pass over every BENCH_codec row (schema + dataflow gate on
-# CPU JAX; writes BENCH_codec.smoke.json, never the real artifact)
+# CPU JAX; writes BENCH_codec.smoke.json, never the real artifact).
+# REPRO_AUTOTUNE=1 is lookup-only: CI validates the checked-in autotune
+# table without ever paying for a sweep. The gate asserts schema 5 and
+# a `blocks` entry on every kernel row.
 bench-smoke:
-	$(PY) -m benchmarks.codec_json --smoke
+	REPRO_AUTOTUNE=1 $(PY) -m benchmarks.codec_json --smoke
+	$(PY) tools/check_bench_schema.py BENCH_codec.smoke.json
+
+# sweep the kernel block spaces at the BENCH shapes on this backend and
+# write the local cache (.repro_autotune.json); add --write-defaults via
+# AUTOTUNE_FLAGS to merge into the checked-in table
+autotune:
+	REPRO_AUTOTUNE=force $(PY) -m repro.kernels.autotune $(AUTOTUNE_FLAGS)
 
 dist-selftest:
 	$(PY) -m repro.dist.selftest

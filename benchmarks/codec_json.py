@@ -39,6 +39,16 @@ own ``path`` field (``pallas_mosaic`` / ``pallas_interpret`` /
 ``xla_fallback``), so BENCH trajectories stay comparable across
 backends per row.
 
+Schema 5 additions: every kernel row (qmatmul / lns_qmatmul /
+kv_attention / kv_attention_paged) records the ``blocks`` configuration
+the call actually used — the autotune table's answer when one exists
+(``kernels/autotune.py``; the doc-level ``autotune_mode`` records the
+``REPRO_AUTOTUNE`` mode in effect), the hand-picked default otherwise —
+plus a paged-attention section and a ``roofline`` section of
+per-kernel-row two-term points (``benchmarks/roofline.py``): arithmetic
+intensity, the v5e compute/memory bounds and the dominant term, so each
+BENCH row carries the bound its tuned blocks are chasing.
+
 ``--smoke`` (also ``run(smoke=True)``) shrinks every shape to
 CI-on-CPU size and writes ``BENCH_codec.smoke.json`` instead — a schema
 and dataflow gate (every row still exercises its real code path), not a
@@ -105,9 +115,13 @@ def _codec_section(rng, n_elems: int) -> dict:
     return out
 
 
-def _qmatmul_rows(rng, specs, *, matmul_fn, shape, extra_fields: dict) -> dict:
+def _qmatmul_rows(rng, specs, *, op, matmul_fn, shape,
+                  extra_fields: dict) -> dict:
     """Shared serving-shape matmul bench: one row per registry spec,
-    keyed by ``spec.name``, timing weight-GB/s and rel_err vs f32."""
+    keyed by ``spec.name``, timing weight-GB/s and rel_err vs f32. The
+    timed call passes no ``block=``, so it uses exactly the blocks the
+    autotune table resolves — recorded per row via
+    ``ops.resolved_blocks``."""
     out: dict = {}
     m, k, nn = shape
     x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
@@ -123,6 +137,7 @@ def _qmatmul_rows(rng, specs, *, matmul_fn, shape, extra_fields: dict) -> dict:
         out[spec.name] = {
             "m": m, "k": k, "n": nn,
             **extra_fields,
+            "blocks": list(ops.resolved_blocks(op, spec, (m, k, nn))),
             "us": round(t * 1e6, 2),
             "weight_gb_per_s": round(wire_bytes / t / 1e9, 4),
             "hbm_ratio_vs_f32": round(32 / spec.n, 2),
@@ -133,7 +148,7 @@ def _qmatmul_rows(rng, specs, *, matmul_fn, shape, extra_fields: dict) -> dict:
 
 def _qmatmul_section(rng, use_kernel: bool, shape) -> dict:
     return _qmatmul_rows(
-        rng, map(formats.get, QMM_FORMATS),
+        rng, map(formats.get, QMM_FORMATS), op="qmatmul",
         matmul_fn=lambda a, ww, s: ops.quant_matmul(a, ww, s, use_kernel,
                                                     None),
         shape=shape, extra_fields={"path": _path(use_kernel)})
@@ -141,7 +156,7 @@ def _qmatmul_section(rng, use_kernel: bool, shape) -> dict:
 
 def _lns_qmatmul_section(rng, use_kernel: bool, shape) -> dict:
     return _qmatmul_rows(
-        rng, map(formats.get, LNS_FORMATS),
+        rng, map(formats.get, LNS_FORMATS), op="lns_qmatmul",
         matmul_fn=lambda a, ww, s: ops.lns_matmul(a, ww, s, "linear",
                                                   use_kernel, None),
         shape=shape,
@@ -181,6 +196,62 @@ def _kv_attention_section(rng, use_kernel: bool, kv_t) -> dict:
             name = "f32" if spec.is_identity else spec.name
             out[f"t{t}/{name}"] = {
                 "b": KV_B, "t": t, "h": h, "h_kv": KV_HKV, "hd": KV_HD,
+                "blocks": list(ops.resolved_blocks("attention", spec, t)),
+                "us": round(tt * 1e6, 2),
+                "kv_bytes_read": kv_bytes,
+                "bytes_read_ratio_vs_f32": round(bytes_per / 4, 4),
+                "kv_gb_per_s": round(kv_bytes / tt / 1e9, 4),
+                "rel_err": rel,
+                "path": _path(use_kernel),
+            }
+    return out
+
+
+PAGED_FORMATS = ("none", "takum8", "posit8")
+
+
+def _paged_attention_section(rng, use_kernel: bool, kv_t, ps: int) -> dict:
+    """Decode-step attention over the *paged* pool — the serving
+    scheduler's kernel (``ops.paged_attention``). The KV tile is fixed
+    by the pool page size, so ``blocks`` records ``[ps]`` — the
+    configuration actually used (there is no free tile knob to sweep;
+    the page size is a pool-level choice, docs/serving.md)."""
+    out: dict = {}
+    h = KV_HKV * KV_G
+    for t in kv_t:
+        npages = -(-t // ps)
+        q = jnp.asarray(
+            rng.normal(size=(KV_B, 1, h, KV_HD)).astype(np.float32))
+        kf = rng.normal(size=(KV_B, npages * ps, KV_HKV,
+                              KV_HD)).astype(np.float32)
+        vf = rng.normal(size=(KV_B, npages * ps, KV_HKV,
+                              KV_HD)).astype(np.float32)
+        table = jnp.arange(KV_B * npages, dtype=jnp.int32).reshape(
+            KV_B, npages)
+        ref_row = None
+        for spec in map(formats.resolve, PAGED_FORMATS):
+            if spec.is_identity:
+                kp = jnp.asarray(kf).reshape(-1, ps, KV_HKV, KV_HD)
+                vp = jnp.asarray(vf).reshape(-1, ps, KV_HKV, KV_HD)
+            else:
+                kp = spec.encode_tile(kf).reshape(-1, ps, KV_HKV, KV_HD)
+                vp = spec.encode_tile(vf).reshape(-1, ps, KV_HKV, KV_HD)
+            bytes_per = spec.bytes_per_elem(jnp.float32)
+            attn = jax.jit(lambda a, kk, vv, tb, s=spec, t=t:
+                           ops.paged_attention(a, kk, vv, tb, s, pos=t - 1,
+                                               use_kernel=use_kernel))
+            tt = time_fn(attn, q, kp, vp, table)
+            got = np.asarray(attn(q, kp, vp, table))
+            if ref_row is None:
+                ref_row = got
+            rel = float(np.linalg.norm(got - ref_row)
+                        / np.linalg.norm(ref_row))
+            kv_bytes = 2 * KV_B * t * KV_HKV * KV_HD * bytes_per
+            name = "f32" if spec.is_identity else spec.name
+            out[f"t{t}/{name}"] = {
+                "b": KV_B, "t": t, "h": h, "h_kv": KV_HKV, "hd": KV_HD,
+                "page_size": ps, "num_pages": npages,
+                "blocks": [ps],
                 "us": round(tt * 1e6, 2),
                 "kv_bytes_read": kv_bytes,
                 "bytes_read_ratio_vs_f32": round(bytes_per / 4, 4),
@@ -269,26 +340,34 @@ def _serving_section(smoke: bool) -> dict:
 
 def run(print_fn=print, out_path: str | None = None,
         smoke: bool = False) -> dict:
+    from benchmarks import roofline
+    from repro.kernels import autotune
+
     rng = np.random.default_rng(0)
     use_kernel = jax.default_backend() == "tpu"
     if smoke:  # CI-on-CPU shapes: a schema/dataflow gate, not a measurement
-        n_elems, qmm_shape, kv_t = 1 << 12, (8, 128, 128), (128,)
+        n_elems, qmm_shape, kv_t, paged_ps = 1 << 12, (8, 128, 128), (128,), 16
     else:
-        n_elems, qmm_shape, kv_t = N_ELEMS, (QMM_M, QMM_K, QMM_N), KV_T
+        n_elems, qmm_shape, kv_t, paged_ps = (
+            N_ELEMS, (QMM_M, QMM_K, QMM_N), KV_T, 64)
     if out_path is None:
         out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
     doc = {
-        "schema": 4,
+        "schema": 5,
         "smoke": smoke,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": jax.default_backend(),
         "host": platform.machine(),
+        "autotune_mode": autotune.mode(),
         **_codec_section(rng, n_elems),
         "qmatmul": _qmatmul_section(rng, use_kernel, qmm_shape),
         "lns_qmatmul": _lns_qmatmul_section(rng, use_kernel, qmm_shape),
         "kv_attention": _kv_attention_section(rng, use_kernel, kv_t),
+        "kv_attention_paged": _paged_attention_section(rng, use_kernel,
+                                                       kv_t, paged_ps),
         "serving": _serving_section(smoke),
     }
+    doc["roofline"] = roofline.kernel_points_from_bench(doc)
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=1)
     for name in ("decode", "encode", "fake_quant"):
@@ -304,6 +383,10 @@ def run(print_fn=print, out_path: str | None = None,
     for fmt, row in doc["kv_attention"].items():
         print_fn(csv_line(
             f"codec_json/kv_attention/{fmt}", row["us"],
+            f"bytes_read_ratio_vs_f32={row['bytes_read_ratio_vs_f32']}"))
+    for fmt, row in doc["kv_attention_paged"].items():
+        print_fn(csv_line(
+            f"codec_json/kv_attention_paged/{fmt}", row["us"],
             f"bytes_read_ratio_vs_f32={row['bytes_read_ratio_vs_f32']}"))
     for key, row in doc["serving"].items():
         print_fn(csv_line(

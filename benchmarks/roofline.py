@@ -1,4 +1,5 @@
-"""Roofline extraction: dry-run JSONs -> three-term analysis per cell.
+"""Roofline extraction: dry-run JSONs -> three-term analysis per cell,
+plus per-kernel roofline points for the fused codec kernels.
 
     compute term    = FLOPs / (chip peak)          [s]
     memory term     = HBM bytes / (HBM bandwidth)  [s]
@@ -6,6 +7,17 @@
 
 Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
 ~50 GB/s/link ICI (per the assignment).
+
+The kernel-point half (:func:`kernel_point`,
+:func:`kernel_points_from_bench`) consumes the measured
+qmatmul / lns_qmatmul / kv_attention / paged-attention rows of
+``BENCH_codec.json`` (schema >= 5) and attaches the two-term analysis —
+arithmetic intensity, the v5e compute/memory bounds, the dominant term
+and the bound the tuned ``blocks`` configuration is chasing. Wire-format
+weights/caches shrink the memory term by 32/n, which is exactly the
+paper's codec argument at kernel granularity: every fused kernel row is
+memory-bound at serving shapes, so decode cost rides along free and the
+wire ratio is the speed-of-light win.
 
 FLOPs sources: the compiled HLO's cost_analysis **counts while-loop
 bodies once** (verified: flops scale 1/K with K-way microbatch scan), so
@@ -182,6 +194,74 @@ def run(print_fn=print, mesh="pod16x16", tag="", dryrun_dir=DRYRUN_DIR,
     with open(out_md, "w") as f:
         f.write(md + "\n")
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Fused-kernel roofline points (BENCH_codec.json schema >= 5)
+# ---------------------------------------------------------------------------
+
+
+def kernel_point(flops: float, hbm_bytes: float, *, measured_us=None,
+                 blocks=None, path=None) -> dict:
+    """Two-term roofline point for one fused-kernel problem."""
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm_bytes / HBM_BW
+    bound = max(t_c, t_m)
+    pt = {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "intensity_flops_per_byte": round(flops / hbm_bytes, 3)
+        if hbm_bytes else None,
+        "t_compute_us_v5e": round(t_c * 1e6, 3),
+        "t_memory_us_v5e": round(t_m * 1e6, 3),
+        "dominant": "compute" if t_c >= t_m else "memory",
+        "bound_us_v5e": round(bound * 1e6, 3),
+    }
+    if measured_us is not None:
+        pt["measured_us"] = measured_us
+        # only meaningful when the measurement ran on the modelled chip
+        pt["roofline_fraction"] = round(bound * 1e6 / measured_us, 4) \
+            if measured_us else None
+    if blocks is not None:
+        pt["blocks"] = list(blocks)
+    if path is not None:
+        pt["path"] = path
+    return pt
+
+
+def _fmt_bytes_per_elem(fmt_name: str) -> float:
+    from repro import formats
+    return formats.resolve("none" if fmt_name == "f32"
+                           else fmt_name).bytes_per_elem()
+
+
+def kernel_points_from_bench(doc: dict) -> dict:
+    """Roofline points for every fused-kernel row of a BENCH document.
+
+    Matmul rows: flops = 2·M·K·N; HBM traffic = wire weights + f32
+    activations in + f32 out (the decode-once weight-stationary story:
+    each wire byte is read exactly once). Attention rows (contiguous and
+    paged): flops = 4·B·T·H·hd for the decode step; traffic = the wire
+    K/V read (already recorded per row) + the f32 q/out vectors.
+    """
+    pts: dict = {}
+    for sec in ("qmatmul", "lns_qmatmul"):
+        for fmt, r in doc.get(sec, {}).items():
+            m, k, n = r["m"], r["k"], r["n"]
+            wire = k * n * _fmt_bytes_per_elem(fmt)
+            hbm = wire + 4.0 * m * k + 4.0 * m * n
+            pts[f"{sec}/{fmt}"] = kernel_point(
+                2.0 * m * k * n, hbm, measured_us=r["us"],
+                blocks=r.get("blocks"), path=r.get("path"))
+    for sec in ("kv_attention", "kv_attention_paged"):
+        for key, r in doc.get(sec, {}).items():
+            b, t, h, hd = r["b"], r["t"], r["h"], r["hd"]
+            qo = 2 * 4.0 * b * h * hd  # f32 q in + out
+            pts[f"{sec}/{key}"] = kernel_point(
+                4.0 * b * t * h * hd, r["kv_bytes_read"] + qo,
+                measured_us=r["us"], blocks=r.get("blocks"),
+                path=r.get("path"))
+    return pts
 
 
 if __name__ == "__main__":

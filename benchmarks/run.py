@@ -20,6 +20,11 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
+    # the launch-path check: benches started outside launch/run.sh run
+    # under glibc malloc — valid numbers, noisier tails
+    from repro.launch.env import warn_if_no_tcmalloc
+    warn_if_no_tcmalloc(lambda s: print(s, file=sys.stderr))
+
     from benchmarks import (codec_json, compressed_allreduce,
                             fig1_decoder_latency, fig2_decoder_area,
                             fig3_encoder_latency, fig4_encoder_area,

@@ -21,12 +21,22 @@ Unlike the FloPoCo-2C encoder (which expects pre-computed rounding
 information from the caller — see §VI-B), our posit encoder implements
 full RNE rounding with posit saturation semantics, making the codec
 comparison *harder* on takum than the paper's own (noted in the bench).
+
+Float reconstruction is **integer-only**, matching the takum datapath
+standard: ``posit_to_float`` assembles the IEEE word directly — sign |
+biased exponent | fraction packed into an unsigned lane and bitcast —
+with explicit RNE; no ldexp, float divide or transcendental on the hot
+path. The pre-existing ldexp dataflow is retained as
+``posit_to_float_ref`` and pinned bit-identical by
+tests/test_posit_int_reconstruct.py, so the takum-vs-posit benchmark
+rows compare *format* cost, not implementation quality.
 """
 
 from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import bitops
@@ -38,9 +48,13 @@ from repro.core.bitops import (
     safe_shr,
     word_dtype,
 )
+# the IEEE assembly machinery is shared with the takum codec so both
+# integer paths stay one implementation (and one audit surface)
+from repro.core.takum import _IEEE, _rne_shr
 
 __all__ = ["PositDecoded", "decode_sm", "decode_2c", "encode",
-           "posit_to_float", "float_to_posit", "frac_width"]
+           "posit_to_float", "posit_to_float_ref", "float_to_posit",
+           "frac_width"]
 
 
 def frac_width(n: int) -> int:
@@ -233,17 +247,99 @@ def encode(s, e, frac, n: int, *, wm: int, sticky=None,
 # ---------------------------------------------------------------------------
 
 
+def _unbar(dec: PositDecoded, n: int):
+    """(mf, me): magnitude fields of a 2C decode, S=1 un-barred.
+
+    magnitude = (1 + mf/2^wf) * 2^me — the inverse of the representation
+    (8) fraction negation (two's complement + exponent borrow), identical
+    in shape to ``takum._unbar``."""
+    wf = frac_width(n)
+    s, e, f = dec.s, dec.e, dec.frac
+    f_nz = f != 0
+    mf = jnp.where((s == 1) & f_nz,
+                   safe_shl(jnp.asarray(1, f.dtype), wf) - f, f)
+    me = e + ((s == 1) & ~f_nz)
+    return mf, me
+
+
 def posit_to_float(words, n: int, dtype=jnp.float32, *, variant: str = "2c"):
+    """Decode n-bit posits to float — **integer-only hot path**.
+
+    The IEEE-754 word is assembled directly: sign | biased exponent |
+    fraction packed into a uint32/uint64 lane and bitcast, with explicit
+    RNE mantissa narrowing, gradual underflow and overflow-to-inf (posits
+    with n <= 32 are all f32 normals — |e| <= 4(n-2)+3 — but the general
+    machinery is kept so n > 32 under x64 behaves like the takum path).
+    ``variant`` selects the decode dataflow ("2c" FloPoCo-2C, "sm"
+    FloPoCo-SM); both produce bit-identical floats, pinned against the
+    retained :func:`posit_to_float_ref` ldexp oracle. For ``wf`` wider
+    than the target significand the oracle's two-step rounding
+    (int->float conversion, then the ``1 + f`` add) is reproduced
+    exactly. Other float dtypes compute in f32 and cast.
+    """
+    _validate_n(n)
+    dt = jnp.dtype(dtype)
+    if dt not in _IEEE:
+        return posit_to_float(words, n, dtype=jnp.float32,
+                              variant=variant).astype(dtype)
+    if dt == jnp.dtype(jnp.float64) and not bitops.x64_enabled():
+        # jax silently degrades f64 arrays to f32 without x64: match that.
+        return posit_to_float(words, n, dtype=jnp.float32, variant=variant)
+    fb, ebias, ew, nan_bits = _IEEE[dt]
+
+    if variant == "2c":
+        dec = decode_2c(words, n)
+        mf, me = _unbar(dec, n)
+    else:
+        dec = decode_sm(words, n)
+        mf, me = dec.frac, dec.e  # rep (7) is already magnitude form
+    wf = frac_width(n)
+    adt = jnp.uint64 if (fb == 52 or n > 32) else jnp.uint32
+    mf = mf.astype(adt)
+
+    # --- significand: mf (wf fraction bits) -> fb fraction bits, RNE ------
+    sb = fb + 1
+    if wf > sb:
+        # emulate the oracle's int->float conversion: values wider than the
+        # significand are rounded to sb significant bits first
+        t = bitops.floor_log2(jnp.maximum(mf, jnp.asarray(1, adt)))
+        sh1 = jnp.maximum(t - fb, 0)
+        mf = jnp.where(sh1 > 0, safe_shl(_rne_shr(mf, sh1), sh1), mf)
+    if wf > fb:
+        frac = _rne_shr(mf, jnp.asarray(wf - fb, jnp.int32))
+    else:
+        frac = safe_shl(mf, fb - wf)
+    carry = (frac >> jnp.asarray(fb, adt)).astype(jnp.int32)  # 1 + f == 2.0
+    frac = frac & mask(fb, adt)
+
+    # --- exponent / assembly ---------------------------------------------
+    be = me + (ebias + carry)             # biased exponent, int32
+    sign = safe_shl(jnp.asarray(dec.s, adt), fb + ew)
+    emax = 2 * ebias + 1                  # all-ones exponent field
+    normal = sign | safe_shl(jnp.clip(be, 0, emax).astype(adt), fb) | frac
+    inf = sign | safe_shl(jnp.asarray(emax, adt), fb)
+    # gradual underflow: shift the full significand onto the subnormal grid
+    sig = safe_shl(jnp.asarray(1, adt), fb) | frac
+    sub = sign | _rne_shr(sig, (1 - be).astype(jnp.int32))
+    word = jnp.where(be >= emax, inf, jnp.where(be <= 0, sub, normal))
+    word = jnp.where(dec.is_zero, jnp.asarray(0, adt), word)
+    word = jnp.where(dec.is_nar, jnp.asarray(nan_bits, adt), word)
+    if fb == 23 and word.dtype != jnp.uint32:
+        word = word.astype(jnp.uint32)
+    return jax.lax.bitcast_convert_type(word, dt)
+
+
+def posit_to_float_ref(words, n: int, dtype=jnp.float32, *,
+                       variant: str = "2c"):
+    """Reference ldexp/divide reconstruction — the pre-integer-path
+    implementation, retained as the oracle for the bit-exactness tests
+    (tests/test_posit_int_reconstruct.py)."""
     dec = decode_2c(words, n) if variant == "2c" else decode_sm(words, n)
     wf = frac_width(n)
     if variant == "2c":
-        s, e, f = dec.s, dec.e, dec.frac
-        f_nz = f != 0
-        mf = jnp.where((s == 1) & f_nz,
-                       safe_shl(jnp.asarray(1, f.dtype), wf) - f, f)
-        me = e + ((s == 1) & ~f_nz)
+        mf, me = _unbar(dec, n)
     else:
-        s, me, mf = dec.s, dec.e, dec.frac
+        mf, me = dec.frac, dec.e
     mant = 1.0 + mf.astype(dtype) / jnp.asarray(1 << wf, dtype)
     out = jnp.where(dec.s == 1, -jnp.ldexp(mant, me), jnp.ldexp(mant, me))
     out = jnp.where(dec.is_zero, jnp.asarray(0, dtype), out)

@@ -12,6 +12,7 @@ from repro.formats.registry import (
     FormatSpec,
     all_formats,
     get,
+    lut_enabled,
     names,
     register,
     resolve,
@@ -26,6 +27,7 @@ __all__ = [
     "FormatSpec",
     "all_formats",
     "get",
+    "lut_enabled",
     "names",
     "register",
     "resolve",

@@ -38,16 +38,18 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import re
 from typing import Callable, Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import bitops
 
 __all__ = ["FormatSpec", "register", "get", "resolve", "resolve_wire",
            "resolve_lns", "all_formats", "wire_formats", "names",
-           "wire_names", "IDENTITY"]
+           "wire_names", "IDENTITY", "lut_enabled"]
 
 
 # ---------------------------------------------------------------------------
@@ -81,6 +83,8 @@ class FormatSpec:
     _lns_parts: Optional[Callable] = dataclasses.field(
         default=None, repr=False)
     _fake_quant: Optional[Callable] = dataclasses.field(
+        default=None, repr=False)
+    _lut: Optional[Callable] = dataclasses.field(
         default=None, repr=False)
 
     # -- identity ----------------------------------------------------------
@@ -119,14 +123,34 @@ class FormatSpec:
 
     # -- codec -------------------------------------------------------------
 
+    @property
+    def has_lut(self) -> bool:
+        """Whether a table-lookup decode exists for this format (only the
+        8-bit formats can — 256 entries fit a VMEM tile)."""
+        return self._lut is not None
+
+    @property
+    def lut_decode(self) -> bool:
+        """Whether :meth:`decode_tile` will take the LUT path *right now*
+        — the hook exists and the environment enables it (see
+        :func:`lut_enabled`). The registry, not the kernels, decides:
+        every tile body reaches the table through the same
+        ``decode_tile`` indirection with zero per-kernel branching."""
+        return self._lut is not None and lut_enabled()
+
     def decode_tile(self, words, dtype=jnp.float32):
         """Wire words -> float, traceable inside a Pallas tile body.
 
         NaR decodes to NaN, the zero word to 0.0. For the identity codec
         this is a cast (so the uncompressed cache rides the same fused
-        kernels)."""
+        kernels). Formats with an enabled LUT hook (``lut_decode``)
+        decode by table lookup instead of the computed dataflow —
+        bit-identical by construction (the table is built by the
+        computed decode at trace time)."""
         if self.is_identity:
             return jnp.asarray(words).astype(dtype)
+        if self._lut is not None and lut_enabled():
+            return self._lut(words, self.n, dtype=dtype)
         return self._decode(words, self.n, dtype=dtype)
 
     def encode_tile(self, x):
@@ -169,6 +193,30 @@ class FormatSpec:
         if self._fake_quant is not None:
             return self._fake_quant(x, self.n, dtype)
         return self.decode_tile(self.encode_tile(x), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# LUT decode gating
+# ---------------------------------------------------------------------------
+
+
+def lut_enabled() -> bool:
+    """Whether LUT decode hooks are active for this process.
+
+    ``REPRO_LUT_DECODE=1`` forces on, ``0`` forces off; unset defaults to
+    TPU only. The default is measured, not aesthetic: the 256-entry
+    gather is a VMEM-resident ``jnp.take`` that wins on the TPU VPU, but
+    XLA:CPU lowers it to a serial gather that loses badly to the computed
+    integer decode (~20x at 2M elements on this host — see
+    docs/formats.md). Read per call (trace-time only), so tests can flip
+    the env var without cache invalidation games.
+    """
+    v = os.environ.get("REPRO_LUT_DECODE", "")
+    if v == "1":
+        return True
+    if v == "0":
+        return False
+    return jax.default_backend() == "tpu"
 
 
 # ---------------------------------------------------------------------------
@@ -219,6 +267,24 @@ def _posit_encode(x, n):
     return posit.float_to_posit(x, n)
 
 
+def _posit8_lut_decode(words, n, dtype=jnp.float32):
+    """256-entry table decode for posit8.
+
+    Pallas kernel bodies cannot capture array constants, so the table is
+    built *inside* the traced body from a 2D iota (TPU requires >= 2D
+    iotas) and the computed integer decode — at trace time this folds to
+    a VMEM constant tile, and each element costs one gather. Bit-identical
+    to the computed path by construction.
+    """
+    assert n == 8
+    from repro.core import posit
+    idx = (jax.lax.broadcasted_iota(jnp.int32, (2, 128), 0) * 128
+           + jax.lax.broadcasted_iota(jnp.int32, (2, 128), 1))
+    tab = posit.posit_to_float(idx.astype(jnp.uint8), 8,
+                               dtype=dtype).reshape(256)
+    return jnp.take(tab, jnp.asarray(words).astype(jnp.int32))
+
+
 _KIND_HOOKS = {
     "linear": dict(_decode=_takum_decode, _encode=_takum_encode,
                    _fake_quant=_takum_scaled_fake_quant),
@@ -243,8 +309,16 @@ def _make(kind: str, n: int) -> FormatSpec:
     if not isinstance(n, int) or n < 2:
         raise ValueError(f"format kind {kind!r} needs a word width n, "
                          f"got {n!r}")
+    hooks = dict(_KIND_HOOKS[kind])
+    # LUT tile codec: only posit8 carries one. takum8's computed decode is
+    # a fixed-window integer dataflow that already beats the gather on
+    # every backend we measured, so "where it wins" is: nowhere (see
+    # docs/formats.md); posit8's full-width CLZ + shifts lose to one
+    # gather on the TPU VPU.
+    if kind == "posit" and n == 8:
+        hooks["_lut"] = _posit8_lut_decode
     return FormatSpec(name=_KIND_NAME[kind].format(n=n), kind=kind, n=n,
-                      **_KIND_HOOKS[kind])
+                      **hooks)
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import formats
+from repro.kernels import autotune
 from repro.kernels import ref as kref
 from repro.kernels import lns_matmul as klns
 from repro.kernels import takum_attention as kattn
@@ -32,7 +33,8 @@ from repro.kernels import takum_codec, takum_matmul, quantize as kquant
 
 __all__ = ["takum_decode", "takum_encode", "fake_quant_fused", "quant_matmul",
            "lns_matmul", "takum_attention", "paged_attention",
-           "interpret_default", "WireMatrix"]
+           "interpret_default", "WireMatrix", "default_qmm_blocks",
+           "default_attention_bk", "resolved_blocks"]
 
 
 def interpret_default() -> bool:
@@ -164,23 +166,60 @@ def quant_matmul(x, w_words, fmt, use_kernel: bool = True,
     Pallas (used off-TPU and by dry-runs). ``interpret=None``
     auto-selects Mosaic on TPU / the Pallas interpreter elsewhere.
     ``block = (bm, bn, bk)`` overrides the weight-stationary kernel's
-    tile sizes (autotuning hook); ``None`` uses the MXU-shaped defaults,
-    with ``bm`` clamped to the padded M so small serving batches don't
-    round up to a full 128-row tile.
+    tile sizes; ``None`` consults the autotune table
+    (``kernels/autotune.py`` — per format, shape bucket and backend,
+    ``REPRO_AUTOTUNE`` gates it) and falls back to the MXU-shaped
+    defaults on a miss, with ``bm`` clamped to the padded M so small
+    serving batches don't round up to a full 128-row tile.
     """
     return _quant_matmul_fwd_impl(x, w_words, fmt, use_kernel, interpret,
                                   block)
 
 
-def _qmm_blocks(m0: int, block: tuple | None) -> tuple:
-    if block is not None:
-        return block
+def default_qmm_blocks(m0: int) -> tuple:
+    """The hand-picked matmul tile default: MXU-shaped, with ``bm``
+    clamped to the padded M so small serving batches don't round up to a
+    full 128-row tile. This is both the pre-autotuner behaviour and the
+    first candidate of every autotune sweep."""
     bm = min(takum_matmul.DEFAULT_BM, max(8, -(-m0 // 8) * 8))
     return (bm, takum_matmul.DEFAULT_BN, takum_matmul.DEFAULT_BK)
 
 
+def default_attention_bk() -> int:
+    """The hand-picked KV tile default for flash decode attention."""
+    return kattn.DEFAULT_BK
+
+
+def _qmm_blocks(spec, m0: int, k0: int, n0: int, block: tuple | None,
+                op: str) -> tuple:
+    """Tile sizes for a matmul call: explicit ``block`` wins; otherwise
+    consult the autotune table for (op, format, shape bucket, backend)
+    and fall back to the hand-picked default on a miss (or with
+    ``REPRO_AUTOTUNE=0``)."""
+    if block is not None:
+        return block
+    tuned = autotune.lookup(op, spec.name,
+                            autotune.matmul_bucket(m0, k0, n0))
+    return tuned if tuned is not None else default_qmm_blocks(m0)
+
+
+def resolved_blocks(op: str, spec_name, shape) -> tuple:
+    """The blocks a blockless call would actually use — what BENCH rows
+    record per row. ``shape`` is ``(m, k, n)`` for the matmul ops or the
+    context length for ``"attention"``."""
+    spec = formats.resolve(spec_name)
+    if op == "attention":
+        tmax = int(shape if isinstance(shape, int) else shape[0])
+        tuned = autotune.lookup(op, spec.name,
+                                autotune.attention_bucket(tmax))
+        bk = tuned[0] if tuned is not None else default_attention_bk()
+        return (min(bk, -(-tmax // 8) * 8),)
+    m0, k0, n0 = shape
+    return _qmm_blocks(spec, m0, k0, n0, None, op)
+
+
 def _matmul_fwd_common(x, w_words, spec, use_kernel, interpret, block, *,
-                       ref_fn, prep_fn, kernel_fn):
+                       op, ref_fn, prep_fn, kernel_fn):
     """Shared shape plumbing for the quantised-matmul wrappers: flatten
     leading dims, pad to the block grid (zero words decode to 0.0 /
     is_zero, so padding is exact), dispatch kernel vs XLA fallback,
@@ -192,7 +231,7 @@ def _matmul_fwd_common(x, w_words, spec, use_kernel, interpret, block, *,
         return ref_fn(x2, w_words, spec).reshape(*lead, n0)
     interpret_ = interpret_default() if interpret is None else interpret
     m0 = x2.shape[0]
-    bm, bn, bk = _qmm_blocks(m0, block)
+    bm, bn, bk = _qmm_blocks(spec, m0, x2.shape[1], n0, block, op)
     xp = _pad_to(prep_fn(x2), bm, bk)
     wp = _pad_to(w_words, bk, bn)
     out = kernel_fn(xp, wp, bm, bn, bk, interpret_)
@@ -223,6 +262,7 @@ def _quant_matmul_fwd_impl(x, w_words, fmt, use_kernel, interpret, block):
     spec = _dense_wire_spec(fmt)
     return _matmul_fwd_common(
         x, w_words, spec, use_kernel, interpret, block,
+        op="qmatmul",
         ref_fn=kref.qmatmul_ref,
         prep_fn=lambda x2: x2,
         kernel_fn=lambda xp, wp, bm, bn, bk, itp:
@@ -294,6 +334,7 @@ def _lns_matmul_fwd_impl(x, w_words, fmt, accum, use_kernel, interpret,
     spec = _lns_wire_spec(fmt)
     return _matmul_fwd_common(
         x, w_words, spec, use_kernel, interpret, block,
+        op="lns_qmatmul",
         ref_fn=kref.lns_qmatmul_ref,
         # activations join the weights on the LNS grid before tiling
         prep_fn=lambda x2: spec.encode_tile(x2),
@@ -350,7 +391,8 @@ def takum_attention(q, k_cache, v_cache, n=0, fmt="none", *,
     what XLA fuses best off-TPU; ``None`` = kernel on TPU, oracle
     elsewhere (the serving auto mode, mirroring ``WireMatrix``).
     ``interpret`` as in :func:`takum_decode`. ``block`` is the KV
-    sequence tile ``bk`` (``None`` = 256, clamped/aligned to ``Tmax``;
+    sequence tile ``bk`` (``None`` consults the autotune table, falling
+    back to 256; either way clamped/aligned to ``Tmax``;
     ``Tmax`` is zero-word padded to a tile multiple — beyond-``pos``
     keys are causally masked, so padding is exact). Calls with
     ``G * tq > max_q_rows`` (prefill-shaped) fall back to the oracle:
@@ -375,7 +417,11 @@ def takum_attention(q, k_cache, v_cache, n=0, fmt="none", *,
     q4 = q4.reshape(b, hkv, rows, hd).astype(jnp.float32)
     if bq != rows:
         q4 = jnp.pad(q4, ((0, 0), (0, 0), (0, bq - rows), (0, 0)))
-    bk = min(block or kattn.DEFAULT_BK, -(-tmax // 8) * 8)
+    if block is None:  # no explicit tile: consult the autotune table
+        tuned = autotune.lookup("attention", spec.name,
+                                autotune.attention_bucket(tmax))
+        block = tuned[0] if tuned is not None else kattn.DEFAULT_BK
+    bk = min(block, -(-tmax // 8) * 8)
     pad_t = -tmax % bk
     kw, vw = k_cache, v_cache
     if pad_t:  # zero words decode to 0.0 / is_zero and are causally masked

@@ -1,0 +1,87 @@
+"""Host process environment for serving and benchmark launches.
+
+One launch path for ``ServeEngine`` runs and ``benchmarks/run.py`` (the
+shell half is ``launch/run.sh``, which sources the same policy):
+
+* **tcmalloc** — XLA's host-side allocator traffic (pinned staging
+  buffers, per-step temporaries) is malloc-bound under glibc; every
+  serving rig we reference LD_PRELOADs tcmalloc when present. This
+  module *detects* (a preload must happen before process start — too
+  late from Python) and the shell script *applies*;
+* **XLA_FLAGS host-device-count knob** — ``REPRO_HOST_DEVICES=N``
+  maps to ``--xla_force_host_platform_device_count=N`` for CPU-mesh
+  experiments, mirroring ``launch/dryrun.py``'s hard-coded 512;
+* log hygiene (``TF_CPP_MIN_LOG_LEVEL``) and the large-alloc report
+  threshold so numpy staging buffers don't spam the console.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Optional
+
+__all__ = ["TCMALLOC_PATHS", "find_tcmalloc", "tcmalloc_active",
+           "host_env", "warn_if_no_tcmalloc"]
+
+TCMALLOC_PATHS = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+)
+
+LARGE_ALLOC_THRESHOLD = 60_000_000_000  # quiet numpy staging buffers
+
+
+def find_tcmalloc() -> Optional[str]:
+    """First present tcmalloc shared object, or None."""
+    for p in TCMALLOC_PATHS:
+        if os.path.exists(p):
+            return p
+    return None
+
+
+def tcmalloc_active() -> bool:
+    """Whether this process was started with tcmalloc preloaded."""
+    return "tcmalloc" in os.environ.get("LD_PRELOAD", "")
+
+
+def host_env(host_device_count: Optional[int] = None,
+             base: Optional[Dict[str, str]] = None) -> Dict[str, str]:
+    """The launch environment as a dict (for subprocess launches).
+
+    ``LD_PRELOAD`` is included when a tcmalloc is found — effective only
+    for *new* processes, which is why benchmarks and serving go through
+    ``launch/run.sh`` (or this dict + ``subprocess``) rather than
+    setting it mid-process. ``host_device_count`` adds the XLA
+    host-platform device knob (``REPRO_HOST_DEVICES`` in run.sh).
+    """
+    env = dict(os.environ if base is None else base)
+    so = find_tcmalloc()
+    if so and "tcmalloc" not in env.get("LD_PRELOAD", ""):
+        env["LD_PRELOAD"] = (so + (" " + env["LD_PRELOAD"]
+                                   if env.get("LD_PRELOAD") else ""))
+    env.setdefault("TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD",
+                   str(LARGE_ALLOC_THRESHOLD))
+    env.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
+    if host_device_count:
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={host_device_count} "
+            + env.get("XLA_FLAGS", ""))
+    return env
+
+
+def warn_if_no_tcmalloc(print_fn: Callable[[str], None] = print) -> bool:
+    """Warn (once per call) when benchmarking without tcmalloc.
+
+    Returns True when tcmalloc is preloaded. Timing noise from glibc
+    malloc arenas is real on the multi-GB staging buffers the codec
+    benches allocate; the numbers stay valid but less stable.
+    """
+    if tcmalloc_active():
+        return True
+    so = find_tcmalloc()
+    hint = (f"launch/run.sh will preload {so}" if so
+            else "no tcmalloc .so found on this host")
+    print_fn(f"# warning: tcmalloc not preloaded ({hint}); "
+             "benchmark timings may be noisier")
+    return False

@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# One launch path for benchmarks and ServeEngine runs — the shell half of
+# repro/launch/env.py (LD_PRELOAD must be set before the process starts,
+# so the allocator swap cannot live in Python).
+#
+#   src/repro/launch/run.sh -m benchmarks.run            # full bench
+#   src/repro/launch/run.sh -m benchmarks.codec_json     # BENCH_codec.json
+#   REPRO_HOST_DEVICES=8 src/repro/launch/run.sh -m repro.dist.selftest
+#
+# Knobs (all optional):
+#   REPRO_HOST_DEVICES=N   XLA host-platform device count (CPU meshes)
+#   REPRO_NO_TCMALLOC=1    skip the tcmalloc preload
+set -euo pipefail
+
+if [ -z "${REPRO_NO_TCMALLOC:-}" ]; then
+  for so in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+            /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+            /usr/lib/libtcmalloc.so.4; do
+    if [ -e "$so" ]; then
+      export LD_PRELOAD="$so${LD_PRELOAD:+ $LD_PRELOAD}"
+      break
+    fi
+  done
+fi
+# no tcmalloc found: benchmarks/run.py prints the warning (python side owns
+# reporting so the message lands in the bench log, not just the console)
+
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}"
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+if [ -n "${REPRO_HOST_DEVICES:-}" ]; then
+  export XLA_FLAGS="--xla_force_host_platform_device_count=${REPRO_HOST_DEVICES}${XLA_FLAGS:+ $XLA_FLAGS}"
+fi
+
+cd "$(dirname "$0")/../../.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python "$@"

@@ -1,0 +1,50 @@
+"""BENCH_codec schema gate: schema 5 + `blocks` on every kernel row.
+
+    python tools/check_bench_schema.py BENCH_codec.smoke.json
+
+Run by `make bench-smoke` (and therefore `make check` / CI) right after
+the smoke bench writes its artifact, so a codec_json change that drops
+the per-row tuned-blocks record — or regresses the schema — fails the
+build instead of silently shipping an unparseable trajectory artifact.
+"""
+
+import json
+import sys
+
+KERNEL_SECTIONS = ("qmatmul", "lns_qmatmul", "kv_attention",
+                   "kv_attention_paged")
+
+
+def check(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc.get("schema") == 5, \
+        f"{path}: schema {doc.get('schema')!r}, expected 5"
+    assert doc.get("autotune_mode") in ("0", "1", "force"), \
+        f"{path}: missing/invalid autotune_mode"
+    n_rows = 0
+    for sec in KERNEL_SECTIONS:
+        rows = doc.get(sec)
+        assert rows, f"{path}: missing kernel section {sec!r}"
+        for key, row in rows.items():
+            blocks = row.get("blocks")
+            assert isinstance(blocks, list) and blocks and \
+                all(isinstance(b, int) and b > 0 for b in blocks), \
+                f"{path}: {sec}/{key} has no valid blocks ({blocks!r})"
+            assert "us" in row and "path" in row, \
+                f"{path}: {sec}/{key} missing us/path"
+            n_rows += 1
+    roof = doc.get("roofline")
+    assert roof, f"{path}: missing roofline section"
+    for key, pt in roof.items():
+        assert pt.get("dominant") in ("compute", "memory"), \
+            f"{path}: roofline/{key} missing dominant term"
+        assert pt.get("bound_us_v5e") is not None, \
+            f"{path}: roofline/{key} missing bound"
+    print(f"# {path}: schema 5 ok — {n_rows} kernel rows with blocks, "
+          f"{len(roof)} roofline points")
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:] or ["BENCH_codec.smoke.json"]:
+        check(p)
