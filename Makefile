@@ -24,19 +24,25 @@ kernel-parity:
 
 # the paged-serving scheduler under both attention dispatch paths: the
 # jnp oracle (=0) and the interpret-mode Pallas kernel (=1). The env is
-# read at import, so each setting is its own pytest process.
+# read at import, so each setting is its own pytest process. Covers the
+# parity pins, the scheduler fuzz (priorities / chunked prefill /
+# per-request sampling vs solo lockstep + key-schedule replay), and the
+# prefix-cache property harness (refcount/COW invariants, device-free).
 serve-gate:
 	REPRO_KV_ATTN_KERNEL=0 $(PY) -m pytest -q tests/test_serve_scheduler.py \
+		tests/test_scheduler_fuzz.py tests/test_prefix_cache.py \
 		tests/test_page_pool.py
 	REPRO_KV_ATTN_KERNEL=1 $(PY) -m pytest -q tests/test_serve_scheduler.py \
+		tests/test_scheduler_fuzz.py tests/test_prefix_cache.py \
 		tests/test_page_pool.py
 
 # execute the fenced python snippets in the documentation (doctest-style
 # smoke: the docs cannot drift from the code silently) + the runnable
-# continuous-batching example
+# continuous-batching and shared-prefix examples
 docs:
 	$(PY) tools/check_docs.py README.md docs/*.md
 	$(PY) examples/serve_continuous.py
+	$(PY) examples/serve_prefix.py
 
 bench:
 	$(PY) -m benchmarks.run
@@ -48,8 +54,9 @@ bench-json:
 # CI-sized pass over every BENCH_codec row (schema + dataflow gate on
 # CPU JAX; writes BENCH_codec.smoke.json, never the real artifact).
 # REPRO_AUTOTUNE=1 is lookup-only: CI validates the checked-in autotune
-# table without ever paying for a sweep. The gate asserts schema 5 and
-# a `blocks` entry on every kernel row.
+# table without ever paying for a sweep. The gate asserts schema 6: a
+# `blocks` entry on every kernel row + the shared-prefix serving row
+# pair with a nonzero warm-tree prefix_hit_rate.
 bench-smoke:
 	REPRO_AUTOTUNE=1 $(PY) -m benchmarks.codec_json --smoke
 	$(PY) tools/check_bench_schema.py BENCH_codec.smoke.json

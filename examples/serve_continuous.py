@@ -47,11 +47,16 @@ def main():
         print(f"request {r} (prompt {len(p):2d} tokens):",
               eng.result(r)[len(p):])
 
+    # after the drain the radix prefix tree still holds each prompt's
+    # full pages for future reuse; clearing it hands every page back
+    prefix = eng.scheduler().prefix
     stats = pool.stats()
     print(f"pool: {stats.num_pages} pages x {stats.page_size} positions "
           f"({stats.hbm_bytes} HBM bytes as {pool.spec.name}), "
-          f"peak in use {stats.peak_in_use}, all returned: "
-          f"{stats.in_use == 0}")
+          f"peak in use {stats.peak_in_use}, "
+          f"tree holds {prefix.pages_held()} prompt pages")
+    prefix.clear()
+    print(f"tree cleared, all returned: {pool.pages_in_use() == 0}")
 
     # the capacity story: same pool page count, 1/4 the HBM vs f32
     # (accounting only — no device arrays needed)

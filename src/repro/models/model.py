@@ -6,6 +6,8 @@
     init_cache(cfg, batch, max_len)                  -> cache
     init_paged_cache(cfg, batch, num_pages, ...)     -> paged cache
     prefill(params, tokens, cfg, cache, media=None)  -> (logits, cache)
+    prefill_chunk(params, tokens, cfg, cache, pos, last_idx)
+                                                     -> (logits, cache)
     decode_step(params, tokens, cfg, cache, pos)     -> (logits, cache)
 
 ``batch`` is a dict: {"tokens": [B,T] int32, "labels": [B,T] int32,
@@ -134,6 +136,25 @@ def prefill(params, tokens, cfg: ModelConfig, cache, *, media=None):
                                                pos=0, media=media,
                                                last_only=True)
     return logits[:, -1], cache
+
+
+def prefill_chunk(params, tokens, cfg: ModelConfig, cache, *, pos,
+                  last_idx):
+    """One page-sized prompt chunk at absolute position ``pos`` (int
+    array ok): fills the cache and returns (logits of chunk row
+    ``last_idx`` [B, V], cache). The scheduler right-pads the final
+    chunk to the page size so every chunk of a prompt compiles to one
+    executable; rows past ``last_idx`` are that padding — their cache
+    appends land beyond the real sequence and are causally masked
+    (the same stale-words containment the paged pool relies on).
+    Attention-only families (the paged scheduler's precondition)."""
+    if cfg.family == "encdec":
+        raise ValueError("prefill_chunk: encdec prefills via encode/decode")
+    logits, cache = transformer.forward_cached(params, tokens, cfg, cache,
+                                               pos=pos)
+    row = jax.lax.dynamic_index_in_dim(logits, last_idx, axis=1,
+                                       keepdims=False)
+    return row, cache
 
 
 def decode_step(params, tokens, cfg: ModelConfig, cache, *, pos,

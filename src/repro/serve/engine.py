@@ -34,7 +34,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, parse_kv_quant
 from repro.models import model
 
-__all__ = ["ServeEngine", "quantize_weights", "CACHE_SLACK"]
+__all__ = ["ServeEngine", "quantize_weights", "sample_rows", "CACHE_SLACK"]
 
 # Lockstep cache headroom beyond ``prompt + max_new`` positions: the
 # pipelined decode loop launches one step beyond the EOS break (its
@@ -42,6 +42,40 @@ __all__ = ["ServeEngine", "quantize_weights", "CACHE_SLACK"]
 # step), and recurrent families round the prompt up before the cache is
 # sized. 8 covers both without a measurable HBM cost.
 CACHE_SLACK = 8
+
+
+def sample_rows(logits, keys, temps, top_ps):
+    """Per-request sampling for the continuous batch: one token per row.
+
+    ``logits [W, V]``, ``keys [W, 2]`` (one PRNG key per row),
+    ``temps``/``top_ps [W]`` -> ``(tokens [W] int32, new_keys [W, 2])``.
+
+    Each row follows the per-request key schedule the fuzz tests replay
+    by hand: ``key, sub = split(key); token = categorical(sub, logits /
+    temp)``. Greedy rows (``temp == 0``) take the argmax — their split
+    result is computed under vmap but discarded by the caller, so a
+    greedy request consumes no randomness. ``top_p >= 1`` selects the
+    *unmasked* scaled logits, making the nucleus filter bit-exactly
+    absent rather than a no-op rewrite of the same distribution; below
+    1, tokens are sorted by probability and a token is kept while the
+    probability mass strictly *before* it is under ``top_p`` (the
+    exclusive cumsum always keeps the top token).
+    """
+    def one(lg, key, temp, top_p):
+        key, sub = jax.random.split(key)
+        greedy = jnp.argmax(lg).astype(jnp.int32)
+        scaled = lg / jnp.maximum(temp, 1e-6)
+        probs = jax.nn.softmax(scaled)
+        order = jnp.argsort(-probs)
+        mass_before = jnp.cumsum(probs[order]) - probs[order]
+        keep = jnp.zeros_like(mass_before, bool).at[order].set(
+            mass_before < top_p)
+        nucleus = jnp.where(keep, scaled, -jnp.inf)
+        dist = jnp.where(top_p >= 1.0, scaled, nucleus)
+        sampled = jax.random.categorical(sub, dist).astype(jnp.int32)
+        return jnp.where(temp > 0.0, sampled, greedy), key
+
+    return jax.vmap(one)(logits, keys, temps, top_ps)
 
 
 _DEFAULT_SKIP = ("embed", "unembed", "scale", "norm")
@@ -168,6 +202,7 @@ class ServeEngine:
     page_size: Optional[int] = None   # None -> kv_block or the kernel tile
     num_pages: Optional[int] = None   # None -> decode_batch full sequences
     decode_batch: int = 8             # packed decode width (slots)
+    prefix_cache: bool = True         # radix-tree shared prompt pages
 
     def __post_init__(self):
         parse_kv_quant(self.cfg.kv_quant)  # reject typos before compiling
@@ -189,8 +224,26 @@ class ServeEngine:
                 nxt = jnp.argmax(logits, axis=-1)
             return nxt.astype(jnp.int32)[:, None], cache
 
+        def _prefill_chunk(params, tokens, cache, pos, last_idx):
+            return model.prefill_chunk(params, tokens, cfg, cache, pos=pos,
+                                       last_idx=last_idx)
+
+        def _step_paged(params, tok, cache, pos, keys, temps, top_ps):
+            logits, cache = model.decode_step(params, tok, cfg, cache,
+                                              pos=pos)
+            toks, new_keys = sample_rows(logits, keys, temps, top_ps)
+            return toks[:, None], cache, new_keys
+
         self._prefill = jax.jit(_prefill)
         self._step = jax.jit(_step)
+        # continuous-batching executables: chunked prefill at a traced
+        # offset (one compile per contiguous-cache width, not per
+        # offset) and the packed decode step with per-slot sampling
+        # state — the lockstep _step above keeps the engine-global key
+        # schedule the PR 3 parity pins rely on
+        self._prefill_chunk = jax.jit(_prefill_chunk)
+        self._step_paged = jax.jit(_step_paged)
+        self._sample_rows = jax.jit(sample_rows)
 
     # -- continuous batching (paged KV pool + scheduler) -------------------
 
@@ -220,7 +273,7 @@ class ServeEngine:
         db = decode_batch or self.decode_batch
         mp = max_pages or max(pages_for(self.max_len, ps), 1)
         npg = num_pages or self.num_pages or (db * mp + 1)
-        key = (ps, mp, npg, db)
+        key = (ps, mp, npg, db, self.prefix_cache)
         if self._sched is not None:
             if self._sched_key == key:
                 return self._sched
@@ -230,7 +283,8 @@ class ServeEngine:
                     f"pending (current {self._sched_key}, wanted {key})")
         prev = self._sched
         self._sched = Scheduler(self, page_size=ps, max_pages=mp,
-                                num_pages=npg, decode_batch=db)
+                                num_pages=npg, decode_batch=db,
+                                prefix_cache=self.prefix_cache)
         if prev is not None:
             # a resize must not lose finished results or reuse rids
             self._sched.adopt_finished(prev)
@@ -238,12 +292,23 @@ class ServeEngine:
         return self._sched
 
     def submit(self, prompt: List[int], max_new: int,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None, *, priority: int = 0,
+               temperature: Optional[float] = None, top_p: float = 1.0,
+               seed: Optional[int] = None) -> int:
         """Enqueue one request on the paged scheduler; returns a request
         id for :meth:`run`'s stream events and :meth:`result`. Raises
         ``repro.serve.paged.AdmissionError`` (naming the KV format and
-        the page budget) when the request can never fit the pool."""
-        return self.scheduler().submit(prompt, max_new, eos_id=eos_id)
+        the page budget) when the request can never fit the pool.
+
+        ``priority``: higher admits first (aged so low priorities are
+        never starved). ``temperature``/``top_p``: per-request sampling
+        (``temperature=None`` inherits the engine's; 0 = greedy).
+        ``seed``: per-request PRNG seed (``None`` derives a key from the
+        engine seed and the request id, so resubmitting the same prompt
+        still draws fresh tokens)."""
+        return self.scheduler().submit(
+            prompt, max_new, eos_id=eos_id, priority=priority,
+            temperature=temperature, top_p=top_p, seed=seed)
 
     def run(self) -> Iterator["StreamEvent"]:  # noqa: F821 (docs name)
         """Serve every submitted request to completion, streaming
@@ -294,13 +359,14 @@ class ServeEngine:
             return self.generate_lockstep(prompts, max_new, media=media)
         from repro.kernels.takum_attention import DEFAULT_BK
         from repro.serve.paged import pages_for
-        # pool sizing must not depend on *this call's* prompts — prompt
-        # buckets (and so left-pad offsets) would shift between a
-        # batched call and its solo replay, which changes what a wire
-        # cache quantises. Derive everything from engine fields: the
-        # page size (clamped to the engine's per-sequence cap so toy
-        # max_len engines compile small pools) and a table wide enough
-        # for a full-length prompt plus this call's growth.
+        # pool sizing is derived from engine fields, not *this call's*
+        # prompts: prompts sit at absolute positions [0, plen) whatever
+        # the pool shape, so a batched call and its solo replay quantise
+        # identical wire words — but a per-call pool would churn
+        # compiles. The page size is clamped to the engine's
+        # per-sequence cap so toy max_len engines compile small pools,
+        # and the table is wide enough for a full-length prompt plus
+        # this call's growth.
         ps = self.page_size or self.cfg.kv_block or DEFAULT_BK
         ps = min(ps, max(8, -(-self.max_len // 8) * 8))
         bucket_max = max(-(-len(p) // ps) * ps for p in prompts)

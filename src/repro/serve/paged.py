@@ -24,10 +24,15 @@ Conventions:
 * **Page 0 is reserved** as the scratch page: idle decode-batch slots
   keep riding the compiled step with ``table`` row 0 / ``pos`` 0, so
   their garbage writes and reads land on a page no live sequence owns.
-* The allocator is host-side and strict: ``free`` of a page that is not
-  currently allocated (double free, never allocated, the scratch page)
-  raises, and ``alloc`` beyond capacity raises — callers are expected
-  to check :meth:`pages_free` first (the scheduler's admission gate).
+* The allocator is host-side, strict, and **refcounted**: ``alloc``
+  hands out pages at refcount 1, ``ref`` adds an owner (a prefix-cache
+  node or another block table sharing the page), ``unref`` drops one —
+  the page returns to the free list only when its last owner lets go.
+  ``free`` is an unref loop, so release code predating sharing keeps
+  working. ``unref`` of a page that is not allocated (double free,
+  never allocated, the scratch page) raises, and ``alloc`` beyond
+  capacity raises — callers are expected to check :meth:`pages_free`
+  first (the scheduler's admission gate).
 * Recycled pages are **not** zeroed: positions past a sequence's
   ``pos`` hold stale words from previous owners, and containment comes
   from the causal mask (see ``ops.paged_attention``), not from
@@ -41,7 +46,7 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -68,15 +73,54 @@ def pages_for(positions: int, page_size: int) -> int:
     return -(-positions // page_size)
 
 
+# jitted page-copy kernels (built lazily: pools with alloc_device=False
+# must not import jax). One compiled executable per (shape, page-count)
+# signature — page *ids* are traced operands, so moving pages around
+# never retraces. Keeping each copy a single compiled call matters for
+# latency: the gather runs on every prefix-hit admission, and eager
+# dispatch overhead there serializes straight into later requests' TTFT.
+_JIT_COPY: Dict[str, object] = {}
+
+
+def _copy_kernels():
+    if not _JIT_COPY:
+        import functools
+
+        import jax
+
+        def gather(pool_kv, dst, pages):
+            # pool pages -> head of a batch-1 contiguous cache
+            tiles = pool_kv[:, pages]           # (n_rep, npg, ps, ...)
+            n_rep, npg, ps = tiles.shape[:3]
+            span = tiles.reshape((n_rep, 1, npg * ps) + tiles.shape[3:])
+            return dst.at[:, :, :npg * ps].set(span)
+
+        @functools.partial(jax.jit, static_argnames=("first_page",))
+        def scatter(pool_kv, src, pages, *, first_page):
+            # contiguous pages [first_page, first_page+npg) -> pool pages
+            n_rep = src.shape[0]
+            ps = pool_kv.shape[2]
+            npg = pages.shape[0]
+            span = src[:, 0, first_page * ps:(first_page + npg) * ps]
+            tiles = span.reshape((n_rep, npg, ps) + src.shape[3:])
+            return pool_kv.at[:, pages].set(tiles)
+
+        _JIT_COPY["gather"] = jax.jit(gather)
+        _JIT_COPY["scatter"] = scatter
+    return _JIT_COPY
+
+
 @dataclasses.dataclass(frozen=True)
 class PageStats:
     """One snapshot of the allocator (``PagePool.stats()``)."""
     num_pages: int          # total pages, scratch page included
     page_size: int
     free: int
-    in_use: int
+    in_use: int             # unique pages with refcount >= 1
     peak_in_use: int
     hbm_bytes: int          # whole pool, all layers, K and V
+    shared_pages: int       # pages with refcount > 1 (prefix dedup)
+    prefix_hit_tokens: int  # prompt tokens served from shared pages
 
 
 class PagePool:
@@ -107,8 +151,9 @@ class PagePool:
         self._dtype = dtype
         # LIFO free list: hot pages get reused first (page 0 reserved)
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
-        self._owned: set = set()
+        self._refs: Dict[int, int] = {}
         self._peak = 0
+        self._prefix_hit_tokens = 0
         # host mirrors of the per-slot table state (pushed on change)
         self.table = np.zeros((batch, max_pages), np.int32)
         self.pos = np.zeros((batch,), np.int32)
@@ -127,15 +172,24 @@ class PagePool:
         return len(self._free)
 
     def pages_in_use(self) -> int:
-        return len(self._owned)
+        """Unique allocated pages (a shared page counts once)."""
+        return len(self._refs)
 
     def peak_pages_in_use(self) -> int:
         """High-water mark of concurrently allocated pages."""
         return self._peak
 
+    def shared_pages(self) -> int:
+        """Pages held by more than one owner (prefix deduplication)."""
+        return sum(1 for c in self._refs.values() if c > 1)
+
+    def refcount(self, page: int) -> int:
+        """Current owner count of ``page`` (0 = free)."""
+        return self._refs.get(page, 0)
+
     def alloc(self, n: int) -> Tuple[int, ...]:
-        """Take ``n`` pages off the free list (strict: raises if short —
-        admission checks :meth:`pages_free` first)."""
+        """Take ``n`` pages off the free list at refcount 1 (strict:
+        raises if short — admission checks :meth:`pages_free` first)."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
@@ -145,20 +199,44 @@ class PagePool:
                 f"(budget {self.num_pages - 1} x {self.page_size} "
                 f"{self.spec.name} KV positions)")
         pages = tuple(self._free.pop() for _ in range(n))
-        self._owned.update(pages)
-        self._peak = max(self._peak, len(self._owned))
+        for p in pages:
+            self._refs[p] = 1
+        self._peak = max(self._peak, len(self._refs))
         return pages
 
+    def ref(self, page: int) -> None:
+        """Add an owner to an allocated page — how a prefix-cache node
+        or a second block table shares it (strict: the page must be
+        allocated; you cannot resurrect a free page by reference)."""
+        if page not in self._refs:
+            raise PagePoolError(
+                f"ref of page {page} which is not allocated "
+                f"(free, scratch page, or foreign id)")
+        self._refs[page] += 1
+
+    def unref(self, page: int) -> None:
+        """Drop one owner; the last owner's unref returns the page to
+        the free list (strict: double frees, the scratch page, and
+        never-allocated ids raise)."""
+        if page not in self._refs:
+            raise PagePoolError(
+                f"free of page {page} which is not allocated "
+                f"(double free, scratch page, or foreign id)")
+        self._refs[page] -= 1
+        if self._refs[page] == 0:
+            del self._refs[page]
+            self._free.append(page)
+
     def free(self, pages: Sequence[int]) -> None:
-        """Return pages to the free list (strict: double frees, the
-        scratch page, and never-allocated ids raise)."""
+        """Unref each page (kept as the bulk-release spelling: with no
+        sharing in play refcounts are 1 and this frees outright)."""
         for p in pages:
-            if p not in self._owned:
-                raise PagePoolError(
-                    f"free of page {p} which is not allocated "
-                    f"(double free, scratch page, or foreign id)")
-            self._owned.discard(p)
-            self._free.append(p)
+            self.unref(p)
+
+    def note_prefix_hits(self, n_tokens: int) -> None:
+        """Account ``n_tokens`` prompt positions served from shared
+        pages instead of recomputed (``PageStats.prefix_hit_tokens``)."""
+        self._prefix_hit_tokens += int(n_tokens)
 
     # -- memory accounting (registry bytes-per-element) --------------------
 
@@ -185,7 +263,9 @@ class PagePool:
         return PageStats(num_pages=self.num_pages, page_size=self.page_size,
                          free=self.pages_free(), in_use=self.pages_in_use(),
                          peak_in_use=self._peak,
-                         hbm_bytes=self.hbm_bytes())
+                         hbm_bytes=self.hbm_bytes(),
+                         shared_pages=self.shared_pages(),
+                         prefix_hit_tokens=self._prefix_hit_tokens)
 
     # -- block tables ------------------------------------------------------
 
@@ -244,11 +324,15 @@ class PagePool:
             attn["pos"] = jnp.broadcast_to(pos, (n_rep,) + pos.shape)
             attn["start"] = jnp.broadcast_to(start, (n_rep,) + start.shape)
 
-    def scatter_prefill(self, contig_caches, pages: Sequence[int]) -> None:
-        """Copy a freshly prefilled *contiguous* single-sequence cache
-        (``model.init_cache(batch=1, max_len=len(pages) * page_size)``)
-        into the pool at ``pages`` — page k of the sequence lands on
-        pool page ``pages[k]``, for every layer."""
+    def scatter_prefill(self, contig_caches, pages: Sequence[int], *,
+                        first_page: int = 0) -> None:
+        """Copy a prefilled *contiguous* single-sequence cache
+        (``model.init_cache(batch=1, ...)``) into the pool at ``pages``
+        — contiguous page ``first_page + k`` lands on pool page
+        ``pages[k]``, for every layer. A prefix-cache hit scatters only
+        the suffix pages it computed (``first_page`` > 0, the shared
+        head pages already live in the pool); the cache may carry slack
+        positions past the scattered range (chunk-padding scratch)."""
         import jax.numpy as jnp
         if self.cache is None:
             raise PagePoolError("pool built with alloc_device=False has "
@@ -256,15 +340,49 @@ class PagePool:
         ps = self.page_size
         pages_arr = jnp.asarray(np.asarray(pages, np.int32))
         npg = len(pages)
+        need = (first_page + npg) * ps
+        scatter = _copy_kernels()["scatter"]
         for pool_attn, contig_attn in zip(self._attn_nodes(self.cache),
                                           self._attn_nodes(contig_caches)):
             for key in ("k", "v"):
                 src = contig_attn[key]          # (n_rep, 1, T, Hkv, hd)
-                n_rep, b1, t = src.shape[:3]
-                if b1 != 1 or t != npg * ps:
+                b1, t = src.shape[1:3]
+                if b1 != 1 or t < need:
                     raise ValueError(
                         f"scatter_prefill expects a batch-1 contiguous "
-                        f"cache of exactly {npg} x {ps} positions, got "
-                        f"{src.shape}")
-                tiles = src[:, 0].reshape((n_rep, npg, ps) + src.shape[3:])
-                pool_attn[key] = pool_attn[key].at[:, pages_arr].set(tiles)
+                        f"cache of at least {first_page + npg} x {ps} "
+                        f"positions, got {src.shape}")
+                pool_attn[key] = scatter(pool_attn[key], src, pages_arr,
+                                         first_page=first_page)
+
+    def gather_prefix(self, contig_caches, pages: Sequence[int], *,
+                      pos: int) -> None:
+        """Inverse of :meth:`scatter_prefill`: copy pool ``pages`` into
+        the head of a contiguous single-sequence cache (page k of the
+        sequence comes from pool page ``pages[k]``) and set every
+        layer's ``pos`` leaf to ``pos`` — the prefix-hit seam. The
+        suffix chunks then prefill *on top of* the shared prefix KV
+        (they must attend to it), and only suffix pages are scattered
+        back. Wire words are copied as words: a gather + scatter
+        round-trip is bit-exact, no re-quantisation."""
+        import jax.numpy as jnp
+        if self.cache is None:
+            raise PagePoolError("pool built with alloc_device=False has "
+                                "no device cache")
+        ps = self.page_size
+        npg = len(pages)
+        pages_arr = jnp.asarray(np.asarray(pages, np.int32))
+        gather = _copy_kernels()["gather"]
+        for pool_attn, contig_attn in zip(self._attn_nodes(self.cache),
+                                          self._attn_nodes(contig_caches)):
+            if npg:
+                for key in ("k", "v"):
+                    dst = contig_attn[key]      # (n_rep, 1, T, Hkv, hd)
+                    if dst.shape[1] != 1 or dst.shape[2] < npg * ps:
+                        raise ValueError(
+                            f"gather_prefix needs a batch-1 contiguous "
+                            f"cache of at least {npg} x {ps} positions, "
+                            f"got {dst.shape}")
+                    contig_attn[key] = gather(pool_attn[key], dst,
+                                              pages_arr)
+            contig_attn["pos"] = jnp.full_like(contig_attn["pos"], pos)

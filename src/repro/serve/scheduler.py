@@ -6,49 +6,73 @@ sequences burn decode steps and every sequence pays
 ``max(prompt) + max_new`` cache slots. This scheduler instead treats
 serving as a stream:
 
-* **submit** enqueues a request (FIFO) after validating it can ever fit
-  the page budget (:class:`repro.serve.paged.AdmissionError` otherwise —
-  the format name and budget in the message, not an OOM inside jit);
-* **admission** happens whenever the head of the queue fits: a free
-  decode-batch slot *and* enough free pages for its worst case
-  (``ceil((prompt_bucket + max_new - 1) / page_size)`` — reserved up
-  front so a running sequence can never strand mid-decode);
-* **prefill interleaves with decode**: an admitted request is prefilled
-  alone on a page-aligned contiguous cache (left-padded to its bucket,
-  the same start-masked path the lockstep engine uses) and scattered
-  into its pages between two decode steps;
+* **submit** enqueues a request after validating it can ever fit the
+  page budget (:class:`repro.serve.paged.AdmissionError` otherwise —
+  the format name and budget in the message, not an OOM inside jit),
+  with per-request ``priority``, ``temperature``/``top_p`` sampling
+  parameters and an optional PRNG ``seed``;
+* **admission** is by priority with aging (FIFO within a priority
+  band): each loop tick the highest effective priority whose worst-case
+  pages fit is admitted — head-of-line blocking is deliberate, it keeps
+  big requests from starving behind a stream of small ones, and aging
+  (+1 priority every ``AGING_TICKS`` ticks queued) keeps low priorities
+  from starving behind high ones;
+* **prompts are never padded**: a request's tokens sit at absolute
+  positions ``[0, plen)``. That makes every sequence's KV — and with a
+  wire-format cache, its encoded words — *batch-invariant*: exactly
+  what a batch-of-1 lockstep run produces, whatever else is in flight.
+  Batch invariance is also what makes cross-request prefix sharing
+  sound (a shared page's post-RoPE words cannot depend on who reads
+  them);
+* **prefix cache**: a radix tree over the page pool
+  (:class:`repro.serve.prefix.PrefixCache`) shares full pages of common
+  prompt prefixes across block tables, refcounted, copy-on-write when a
+  fully-cached prompt needs its last page recomputed for logits;
+* **prefill is chunked**: an admitted request prefills one
+  ``page_size`` chunk per loop tick on a private contiguous cache
+  (seeded with the shared prefix pages via ``gather_prefix``),
+  interleaved with the decode batch so a long prompt never stalls
+  decoding; finished prompts are scattered into their pages
+  (``scatter_prefill``) — the same seam one-shot prefill used;
 * **decode packs** all active sequences into one fixed-width compiled
-  step — per-sequence ``pos``/``start`` vectors and the block table ride
-  into the paged attention kernel; idle slots point at the reserved
-  scratch page;
+  step — per-sequence ``pos`` vectors, per-slot sampling state
+  (key/temperature/top-p rows; greedy rows consume no randomness), and
+  the block table ride into the paged attention kernel; idle slots
+  point at the reserved scratch page;
 * **release is immediate**: the step a sequence emits EOS or hits
-  ``max_new``, its pages go back to the free list and its slot admits
-  the next queued request.
+  ``max_new``, its pages are unreferenced — private pages return to the
+  free list, tree-donated pages live on under the prefix cache until
+  evicted.
 
-Token order within one request is deterministic; *across* requests the
-schedule depends on page availability, so temperature sampling draws
-from the engine key in admission/step order (documented as
-schedule-dependent — greedy decoding is schedule-invariant and is what
-the parity pins use).
+Tokens are deterministic per request — greedy requests are pinned
+bit-identical to solo lockstep generation, sampled requests to the
+per-request key schedule ``key, sub = split(key); tok =
+categorical(sub, logits / temp)`` — and *independent of the schedule*:
+priorities and page pressure change when a token is produced, never its
+value.
 
 Compilation: one decode-step executable per (decode_batch, table-width)
-pool shape, one prefill executable per distinct prompt *bucket* (prompt
-length rounded up to the page size) — the page size is the bucketing
-granularity, so a 256-wide page serves any prompt band with one
-compile.
+pool shape, one chunk-prefill executable per distinct contiguous-cache
+width (prompt pages + one slack page; the chunk length is always
+``page_size`` — tails are right-padded with scratch tokens whose cache
+writes are causally masked).
 """
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from repro.serve.paged import AdmissionError, PagePool, pages_for
+from repro.serve.prefix import PrefixCache, PrefixPlan
 
-__all__ = ["Scheduler", "Request", "StreamEvent"]
+__all__ = ["Scheduler", "Request", "StreamEvent", "AGING_TICKS"]
+
+# a queued request gains one effective priority level per this many
+# scheduler ticks: low-priority requests cannot starve forever
+AGING_TICKS = 32
 
 
 @dataclasses.dataclass
@@ -58,12 +82,21 @@ class Request:
     prompt: List[int]
     max_new: int
     eos_id: int
-    bucket: int                 # prompt length rounded up to the page size
-    pages_needed: int           # worst-case pages, reserved at admission
-    state: str = "queued"       # queued | active | done
+    pages_needed: int           # worst-case pages, secured at admission
+    priority: int = 0
+    temperature: float = 0.0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+    state: str = "queued"       # queued | prefilling | active | done
     generated: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     pages: Tuple[int, ...] = ()
+    submit_tick: int = 0
+    # prefill progress (state == "prefilling")
+    _contig: object = None      # private contiguous cache
+    _cursor: int = 0            # next prompt position to prefill
+    _first_page: int = 0        # first contig page scattered back
+    _key: object = None         # per-request PRNG key (device, temp > 0)
 
     @property
     def done(self) -> bool:
@@ -91,48 +124,69 @@ class Scheduler:
     """
 
     def __init__(self, engine, *, page_size: int, max_pages: int,
-                 num_pages: int, decode_batch: int):
+                 num_pages: int, decode_batch: int,
+                 prefix_cache: bool = True):
         from repro.models import transformer
+        from repro.models.layers import ATTN_CHUNK_T
         if not transformer.paged_supported(engine.cfg):
             raise ValueError(
                 f"continuous batching needs an attention-only layer plan; "
                 f"family {engine.cfg.family!r} has non-attention state "
                 "(use the lockstep ServeEngine.generate)")
+        if page_size >= ATTN_CHUNK_T:
+            # chunk prefill rides the cached-prefill attention branch;
+            # at ATTN_CHUNK_T the fresh-prefill fast path would claim a
+            # t > 1 call and assume pos == 0
+            raise ValueError(f"page_size must be < {ATTN_CHUNK_T}, "
+                             f"got {page_size}")
         self.engine = engine
         self.decode_batch = decode_batch
         self.page_size = page_size
         self.pool = PagePool(engine.cfg, batch=decode_batch,
                              num_pages=num_pages, page_size=page_size,
                              max_pages=max_pages)
-        self._queue: collections.deque = collections.deque()
+        self.prefix: Optional[PrefixCache] = \
+            PrefixCache(self.pool) if prefix_cache else None
+        self._queue: List[Request] = []
         self._requests: Dict[int, Request] = {}
         self._slots: List[Optional[Request]] = [None] * decode_batch
         self._next_rid = 0
-        import jax
-        self._key = jax.random.PRNGKey(engine.seed)
+        self._tick = 0
+        self._plan_gather = None   # _secure_pages -> _start_prefill handoff
+        self.prompt_tokens_submitted = 0
 
     # -- queueing ----------------------------------------------------------
 
     def submit(self, prompt: List[int], max_new: int,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None, *, priority: int = 0,
+               temperature: Optional[float] = None, top_p: float = 1.0,
+               seed: Optional[int] = None) -> int:
         """Enqueue a request; returns its request id.
 
         Raises :class:`AdmissionError` immediately when the request can
         *never* run: its worst-case page count exceeds the pool budget
-        or the block-table width. Requests that merely have to wait for
-        pages stay queued.
+        or the block-table width (chunked prefill does not change the
+        worst case — every prompt page must be resident at once for
+        decode). Requests that merely have to wait for pages stay
+        queued.
         """
         prompt = list(prompt)
         if not prompt:
             raise ValueError("empty prompt")
         if max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {max_new}")
+        temperature = (self.engine.temperature if temperature is None
+                       else float(temperature))
+        if temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {temperature}")
+        if not 0.0 < top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {top_p}")
         ps = self.page_size
-        bucket = -(-len(prompt) // ps) * ps
-        # last KV write lands at bucket + max_new - 2 (the final token is
-        # sampled, never written), so the worst case spans
-        # bucket + max_new - 1 positions
-        needed = pages_for(bucket + max_new - 1, ps)
+        # the last KV write lands at plen + max_new - 2 (the final token
+        # is sampled, never written), so the worst case spans
+        # plen + max_new - 1 positions — no padding, prompts sit at
+        # absolute positions [0, plen)
+        needed = pages_for(len(prompt) + max_new - 1, ps)
         pool = self.pool
         if needed > pool.max_pages:
             raise AdmissionError(
@@ -152,9 +206,12 @@ class Scheduler:
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt, max_new=max_new,
                       eos_id=self.engine.eos_id if eos_id is None else eos_id,
-                      bucket=bucket, pages_needed=needed)
+                      pages_needed=needed, priority=priority,
+                      temperature=temperature, top_p=top_p, seed=seed,
+                      submit_tick=self._tick)
         self._requests[rid] = req
         self._queue.append(req)
+        self.prompt_tokens_submitted += len(prompt)
         return rid
 
     def result(self, rid: int) -> List[int]:
@@ -193,92 +250,205 @@ class Scheduler:
         """Drive the schedule until queue and batch drain, streaming
         every generated token as a :class:`StreamEvent`."""
         while self._queue or any(s is not None for s in self._slots):
-            yield from self._admit()
+            self._tick += 1
+            self._admit()
+            yield from self._prefill_tick()
             yield from self._decode_step()
 
-    def _sample(self, logits):
-        """One token from [B, V] logits under the engine's policy (the
-        same argmax/categorical split as the lockstep loop; scheduler
-        sampling order is schedule-dependent, see module docstring)."""
-        import jax
-        import jax.numpy as jnp
-        temp = self.engine.temperature
-        if temp > 0.0:
-            self._key, sub = jax.random.split(self._key)
-            return jax.random.categorical(sub, logits / temp, axis=-1)
-        return jnp.argmax(logits, axis=-1)
+    # -- admission ---------------------------------------------------------
 
-    def _admit(self) -> Iterator[StreamEvent]:
-        """Admit queued requests while a slot and their pages are free:
-        prefill alone on a page-aligned contiguous cache, scatter into
-        the pool, install the block table.
+    def _effective_priority(self, req: Request) -> int:
+        return req.priority + (self._tick - req.submit_tick) // AGING_TICKS
+
+    def _admit(self) -> None:
+        """Admit queued requests in effective-priority order while a
+        slot and their worst-case pages can be secured: take references
+        on the radix tree's shared prefix pages, evict cold tree leaves
+        if the private remainder is short, allocate it, and seed the
+        request's private contiguous cache with the shared prefix KV
+        (``gather_prefix`` — wire words copied as words, bit-exact).
+
+        Stops at the first request that does not fit (head-of-line
+        blocking by design: admitting smaller later requests first
+        would starve large ones — aging already orders the queue)."""
+        while self._queue:
+            order = sorted(self._queue,
+                           key=lambda r: (-self._effective_priority(r),
+                                          r.rid))
+            req = order[0]
+            slot = next((i for i, s in enumerate(self._slots) if s is None),
+                        None)
+            if slot is None or not self._secure_pages(req):
+                return
+            self._queue.remove(req)
+            self._start_prefill(req, slot)
+
+    def _secure_pages(self, req: Request) -> bool:
+        """Reserve ``req``'s worst-case pages: shared prefix pages by
+        reference, the private remainder from the free list (evicting
+        LRU tree leaves as needed). On success ``req.pages`` holds the
+        full page list (shared head + private tail) and ``req._cursor``/
+        ``req._first_page`` mark where prefill starts."""
+        pool, plen = self.pool, len(req.prompt)
+        plan = (self.prefix.plan(req.prompt) if self.prefix is not None
+                else PrefixPlan(shared=(), cow_src=None, suffix_start=0))
+        n_private = req.pages_needed - len(plan.shared)
+        if self.prefix is not None:
+            self.prefix.acquire(req.prompt, plan)
+            if plan.cow_src is not None:
+                # pin the carved-out page for the gather below — eviction
+                # under page pressure must not free what we are reading
+                pool.ref(plan.cow_src)
+            self.prefix.evict_for(n_private)
+        if pool.pages_free() < n_private:
+            if self.prefix is not None:
+                if plan.cow_src is not None:
+                    pool.unref(plan.cow_src)
+                for p in plan.shared:
+                    pool.unref(p)
+            return False
+        private = pool.alloc(n_private)
+        req.pages = plan.shared + private
+        req._cursor = plan.suffix_start
+        req._first_page = plan.suffix_start // self.page_size
+        if plan.hit_tokens:
+            pool.note_prefix_hits(plan.hit_tokens)
+        self._plan_gather = (plan, req)
+        return True
+
+    def _start_prefill(self, req: Request, slot: int) -> None:
+        """Build the request's private contiguous prefill cache, seeded
+        with the shared prefix pages (and, on a full-hit COW, the
+        carved-out source page — copied, then unpinned)."""
+        from repro.models import model
+        eng = self.engine
+        plan, _ = self._plan_gather
+        ps = self.page_size
+        plen = len(req.prompt)
+        # one slack page past the prompt pages: the final (or COW) chunk
+        # is right-padded to ps, and its padding appends may run past
+        # the prompt bucket — dynamic_update_slice must never clamp
+        width = (pages_for(plen, ps) + 1) * ps
+        contig = model.init_cache(eng.cfg, batch=1, max_len=width)
+        gather = plan.shared + ((plan.cow_src,)
+                                if plan.cow_src is not None else ())
+        self.pool.gather_prefix(contig, gather, pos=plan.suffix_start)
+        if plan.cow_src is not None:
+            self.pool.unref(plan.cow_src)
+        req._contig = contig
+        req.state = "prefilling"
+        req.slot = slot
+        self._slots[slot] = req
+        self._plan_gather = None
+
+    # -- chunked prefill ---------------------------------------------------
+
+    def _request_key(self, req: Request):
+        import jax
+        if req._key is None:
+            base = jax.random.PRNGKey(self.engine.seed if req.seed is None
+                                      else req.seed)
+            req._key = (base if req.seed is not None
+                        else jax.random.fold_in(base, req.rid))
+        return req._key
+
+    def _prefill_tick(self) -> Iterator[StreamEvent]:
+        """One ``page_size`` chunk for every prefilling slot. A request
+        whose last chunk lands samples its first token, scatters its
+        computed pages into the pool, donates its full prompt pages to
+        the radix tree, and joins the decode batch.
 
         Events are buffered and yielded only after ``push_tables`` has
         committed the new device state: a consumer that abandons the
         stream mid-yield must never leave host bookkeeping ahead of the
         device cache."""
         import jax.numpy as jnp
-        from repro.models import model
         eng = self.engine
+        ps = self.page_size
         events = []
-        while self._queue:
-            req = self._queue[0]
-            slot = next((i for i, s in enumerate(self._slots) if s is None),
-                        None)
-            if slot is None or self.pool.pages_free() < req.pages_needed:
-                break
-            self._queue.popleft()
-            pages = self.pool.alloc(req.pages_needed)
+        activated = False
+        for slot in range(self.decode_batch):
+            req = self._slots[slot]
+            if req is None or req.state != "prefilling":
+                continue
             plen = len(req.prompt)
-            start_off = req.bucket - plen
-            prompt = np.zeros((1, req.bucket), np.int32)
-            prompt[0, start_off:] = req.prompt
-            contig = model.init_cache(
-                eng.cfg, batch=1, max_len=req.bucket,
-                start=np.asarray([start_off], np.int32) if start_off
-                else None)
-            logits, contig = eng._prefill(eng.params, jnp.asarray(prompt),
-                                          contig, None)
-            tok0 = int(np.asarray(self._sample(logits))[0])
-            self.pool.scatter_prefill(contig,
-                                      pages[:req.bucket // self.page_size])
+            chunk = req.prompt[req._cursor:req._cursor + ps]
+            tokens = np.zeros((1, ps), np.int32)
+            tokens[0, :len(chunk)] = chunk
+            row, req._contig = eng._prefill_chunk(
+                eng.params, jnp.asarray(tokens), req._contig,
+                jnp.asarray(req._cursor, jnp.int32),
+                jnp.asarray(len(chunk) - 1, jnp.int32))
+            req._cursor += len(chunk)
+            if req._cursor < plen:
+                continue
+            # prompt complete: sample token 0 under the request policy
+            if req.temperature > 0.0:
+                keys = self._request_key(req)[None]
+            else:
+                keys = jnp.zeros((1, 2), jnp.uint32)
+            toks, new_keys = eng._sample_rows(
+                row, keys, jnp.asarray([req.temperature], jnp.float32),
+                jnp.asarray([req.top_p], jnp.float32))
+            if req.temperature > 0.0:
+                req._key = new_keys[0]
+            tok0 = int(np.asarray(toks)[0])
+            n_prompt_pages = pages_for(plen, ps)
+            self.pool.scatter_prefill(
+                req._contig, req.pages[req._first_page:n_prompt_pages],
+                first_page=req._first_page)
+            req._contig = None
+            if self.prefix is not None:
+                self.prefix.insert(req.prompt, req.pages[:plen // ps])
             req.state = "active"
-            req.slot, req.pages = slot, pages
             req.generated.append(tok0)
-            self._slots[slot] = req
-            self.pool.assign(slot, pages, pos=req.bucket, start=start_off)
+            self.pool.assign(slot, req.pages, pos=plen)
+            activated = True
             done = tok0 == req.eos_id or len(req.generated) >= req.max_new
             if done:
                 self._release(req)
             events.append(StreamEvent(req.rid, tok0, done))
-        if events:
+        if activated:
             self.pool.push_tables()
         yield from events
 
+    # -- packed decode -----------------------------------------------------
+
     def _decode_step(self) -> Iterator[StreamEvent]:
-        """One compiled step for every active slot; release finished
-        sequences' pages the same step."""
-        import jax
+        """One compiled step for every active slot — per-slot sampling
+        state rides along; release finished sequences' pages the same
+        step."""
         import jax.numpy as jnp
-        active = [i for i, s in enumerate(self._slots) if s is not None]
+        active = [i for i, s in enumerate(self._slots)
+                  if s is not None and s.state == "active"]
         if not active:
             return
         eng = self.engine
-        tok = np.zeros((self.decode_batch, 1), np.int32)
+        w = self.decode_batch
+        tok = np.zeros((w, 1), np.int32)
+        temps = np.zeros((w,), np.float32)
+        top_ps = np.ones((w,), np.float32)
+        zero_key = jnp.zeros((2,), jnp.uint32)
+        key_rows = [zero_key] * w
         for i in active:
-            tok[i, 0] = self._slots[i].generated[-1]
+            req = self._slots[i]
+            tok[i, 0] = req.generated[-1]
+            temps[i] = req.temperature
+            top_ps[i] = req.top_p
+            if req.temperature > 0.0:
+                key_rows[i] = self._request_key(req)
         # snapshot pos: the pool mutates its host mirror in place right
         # after dispatch (advance), and a zero-copy transfer would alias
         pos = jnp.asarray(self.pool.pos[:, None].copy())  # (W, 1) RoPE
-        if eng.temperature > 0.0:
-            self._key, sub = jax.random.split(self._key)
-        else:
-            sub = self._key
-        tok_next, cache = eng._step(
-            eng.params, jnp.asarray(tok), self.pool.cache, pos, sub,
-            jnp.asarray(max(eng.temperature, 1e-6)))
+        tok_next, cache, new_keys = eng._step_paged(
+            eng.params, jnp.asarray(tok), self.pool.cache, pos,
+            jnp.stack(key_rows), jnp.asarray(temps), jnp.asarray(top_ps))
         self.pool.cache = cache
         self.pool.advance(active)
+        for i in active:
+            req = self._slots[i]
+            if req.temperature > 0.0:
+                req._key = new_keys[i]
         # this read blocks on the step just dispatched — the deliberate
         # price of *same-step* page release and admission (the whole
         # point of the paged pool); the lockstep loop, which never
@@ -304,8 +474,11 @@ class Scheduler:
         yield from events
 
     def _release(self, req: Request) -> None:
-        """Return the request's pages and slot the step it finishes."""
-        self.pool.free(req.pages)
+        """Unreference the request's pages and free its slot the step
+        it finishes. Private pages return to the free list; pages the
+        prefix tree also holds live on as shared prompt prefix."""
+        for p in req.pages:
+            self.pool.unref(p)
         if req.slot >= 0:
             self.pool.clear(req.slot)
             self._slots[req.slot] = None

@@ -1,0 +1,221 @@
+"""Scheduler fuzz: random priorities, chunked prefill, real sampling.
+
+Randomized request mixes — priorities, prompt lengths that force
+chunked prefill (longer than the page), per-request temperatures and
+seeds, early EOS — must never change *what* a request generates, only
+*when*. Two pins:
+
+  * temperature 0: every request matches solo (batch-of-1)
+    ``generate_lockstep`` token-for-token, whatever its priority and
+    whatever else shared the batch;
+  * temperature > 0: every request matches a manual replay of the
+    documented per-request key schedule — ``PRNGKey(seed)`` (or
+    ``fold_in(PRNGKey(engine.seed), rid)``), advanced by the split
+    inside :func:`repro.serve.engine.sample_rows` — over a solo
+    contiguous-cache run. Sampling is schedule-invariant.
+
+Both pins run under the oracle and interpret-kernel attention dispatch
+(``REPRO_KV_ATTN_KERNEL=0`` / ``=1`` in CI; parametrized here via the
+same ``KV_ATTN_KERNEL`` monkeypatch as ``test_serve_scheduler``).
+Admission must reject never-fitting requests at ``submit()`` time —
+including prompts that would prefill in chunks — without leaking pages.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.models import model
+from repro.serve.engine import ServeEngine, sample_rows
+from repro.serve.paged import AdmissionError
+
+PS = 8                                   # page size — prompts above force
+PLENS_POOL = (3, 8, 11, 16, 19, 24)      # chunked prefill (up to 3 chunks)
+
+
+@pytest.fixture(scope="module")
+def base_cfg():
+    return get_arch("phi3-medium-14b").reduced
+
+
+@pytest.fixture(scope="module")
+def params(base_cfg):
+    return model.init(jax.random.PRNGKey(0), base_cfg)
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("max_len", 48)
+    kw.setdefault("page_size", PS)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _random_batch(rng, cfg, n):
+    prompts = [list(map(int, rng.integers(0, cfg.vocab,
+                                          rng.choice(PLENS_POOL))))
+               for _ in range(n)]
+    max_news = [int(rng.integers(2, 6)) for _ in range(n)]
+    prios = [int(rng.integers(0, 4)) for _ in range(n)]
+    return prompts, max_news, prios
+
+
+# ---------------------------------------------------------------------------
+# pin 1: greedy fuzz == solo lockstep, any priorities, chunked prefill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["oracle", "kernel"])
+def test_fuzz_greedy_matches_solo_lockstep(base_cfg, params, use_kernel,
+                                           monkeypatch):
+    from repro.models import layers as L
+    monkeypatch.setattr(L, "KV_ATTN_KERNEL", use_kernel)
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    eng = _engine(params, cfg, decode_batch=2)
+    mid_tokens = []
+    for trial in range(2):
+        rng = np.random.default_rng(100 + trial)
+        prompts, max_news, prios = _random_batch(rng, cfg, n=5)
+        rids = [eng.submit(p, m, priority=pr)
+                for p, m, pr in zip(prompts, max_news, prios)]
+        for _ in eng.run():
+            pass
+        for rid, p, m in zip(rids, prompts, max_news):
+            assert eng.result(rid) == eng.generate_lockstep([p], m)[0], \
+                (trial, rid, use_kernel)
+            mid_tokens.extend(eng.result(rid)[len(p) + 1:-1])
+    assert any(len(p) > PS for p in prompts), "no chunked prefill drawn"
+
+    # early EOS: stop on a token the free run emitted mid-generation;
+    # solo lockstep honours the same eos, so parity must survive it
+    eos = mid_tokens[0]
+    eng_eos = _engine(params, cfg, decode_batch=2, eos_id=eos)
+    rng = np.random.default_rng(321)
+    prompts, max_news, prios = _random_batch(rng, cfg, n=4)
+    rids = [eng_eos.submit(p, m, priority=pr)
+            for p, m, pr in zip(prompts, max_news, prios)]
+    for _ in eng_eos.run():
+        pass
+    for rid, p, m in zip(rids, prompts, max_news):
+        assert eng_eos.result(rid) == eng_eos.generate_lockstep([p], m)[0]
+
+
+# ---------------------------------------------------------------------------
+# pin 2: sampling fuzz == manual per-request key-schedule replay
+# ---------------------------------------------------------------------------
+
+
+def _solo_replay(eng, params, cfg, prompt, max_new, temp, top_p, seed, rid):
+    """Replay one request on a solo contiguous cache with the documented
+    key schedule; greedy requests replay as solo lockstep."""
+    if temp == 0.0:
+        return eng.generate_lockstep([prompt], max_new)[0]
+    key = (jax.random.PRNGKey(seed) if seed is not None
+           else jax.random.fold_in(jax.random.PRNGKey(eng.seed), rid))
+    keys = key[None]
+    cache = model.init_cache(cfg, 1, eng.max_len)
+    logits, cache = model.prefill(params, jnp.asarray([prompt]), cfg, cache)
+    out = list(prompt)
+    pos = len(prompt)
+    for _ in range(max_new):
+        toks, keys = sample_rows(logits, keys,
+                                 jnp.asarray([temp], jnp.float32),
+                                 jnp.asarray([top_p], jnp.float32))
+        tok = int(toks[0])
+        out.append(tok)
+        if eng.eos_id is not None and tok == eng.eos_id:
+            break
+        logits, cache = model.decode_step(params, jnp.asarray([[tok]]),
+                                          cfg, cache, pos=pos)
+        pos += 1
+    return out
+
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["oracle", "kernel"])
+def test_fuzz_sampling_matches_key_schedule(base_cfg, params, use_kernel,
+                                            monkeypatch):
+    from repro.models import layers as L
+    monkeypatch.setattr(L, "KV_ATTN_KERNEL", use_kernel)
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    eng = _engine(params, cfg, decode_batch=2)
+    rng = np.random.default_rng(7)
+    prompts, _, prios = _random_batch(rng, cfg, n=4)
+    temps = [0.0, 0.7, 1.1, 0.7]             # greedy and sampled mixed
+    top_ps = [1.0, 1.0, 0.9, 0.8]            # incl. the nucleus filter
+    seeds = [None, 11, None, 42]             # explicit and rid-derived
+    max_new = 4
+    rids = [eng.submit(p, max_new, priority=pr, temperature=t, top_p=tp,
+                       seed=s)
+            for p, pr, t, tp, s in zip(prompts, prios, temps, top_ps, seeds)]
+    for _ in eng.run():
+        pass
+    for rid, p, t, tp, s in zip(rids, prompts, temps, top_ps, seeds):
+        want = _solo_replay(eng, params, cfg, p, max_new, t, tp, s, rid)
+        assert eng.result(rid) == want, (rid, t, tp, s, use_kernel)
+
+
+def test_greedy_rows_consume_no_randomness(base_cfg, params):
+    """A temp-0 request's presence must not perturb a sampled
+    neighbour: greedy rows take argmax and discard their split, so the
+    sampled request's tokens are identical with or without greedy
+    company in the batch."""
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    rng = np.random.default_rng(5)
+    prompt = list(map(int, rng.integers(0, cfg.vocab, 11)))
+    other = list(map(int, rng.integers(0, cfg.vocab, 16)))
+
+    eng = _engine(params, cfg, decode_batch=2)
+    rid = eng.submit(prompt, 4, temperature=0.9, seed=13)
+    for _ in eng.run():
+        pass
+    alone = eng.result(rid)
+
+    eng2 = _engine(params, cfg, decode_batch=2)
+    r1 = eng2.submit(other, 4)                       # greedy companion
+    r2 = eng2.submit(prompt, 4, temperature=0.9, seed=13)
+    for _ in eng2.run():
+        pass
+    assert eng2.result(r2) == alone, "greedy row consumed randomness"
+    assert eng2.result(r1) == eng2.generate_lockstep([other], 4)[0]
+
+
+# ---------------------------------------------------------------------------
+# admission: never-fitting requests fail loudly at submit(), no leaks
+# ---------------------------------------------------------------------------
+
+
+def test_admission_error_at_submit_for_chunked_requests(base_cfg, params):
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    eng = _engine(params, cfg, num_pages=3)          # 2 allocatable pages
+    chunked = list(range(3 * PS))                    # 3 prefill chunks
+    # longer than the block table can ever hold
+    with pytest.raises(AdmissionError, match="block table"):
+        eng.submit(chunked, max_new=1000)
+    # fits the table but can never fit the pool: pages_for(24+2-1, 8) = 4
+    with pytest.raises(AdmissionError, match="allocatable"):
+        eng.submit(chunked, max_new=2)
+    # rejected submits must leave no queue entry and leak no pages
+    sched = eng.scheduler()
+    assert sched.pending() == 0
+    assert sched.pool.pages_in_use() == 0
+    # a fitting chunked request still runs: pages_for(9 + 2 - 1, 8) = 2
+    rid = eng.submit(list(range(9)), max_new=2)
+    for _ in eng.run():
+        pass
+    assert len(eng.result(rid)) == 11
+
+
+def test_submit_validates_sampling_params(base_cfg, params):
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    eng = _engine(params, cfg)
+    with pytest.raises(ValueError, match="temperature"):
+        eng.submit([1, 2, 3], 2, temperature=-0.5)
+    with pytest.raises(ValueError, match="top_p"):
+        eng.submit([1, 2, 3], 2, top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        eng.submit([1, 2, 3], 2, top_p=1.5)
+    assert eng.scheduler().pending() == 0

@@ -1,14 +1,15 @@
 """Continuous-batching scheduler vs lockstep: parity pins + acceptance.
 
-The scheduler must reproduce lockstep ``generate`` token-for-token at
-temperature 0. Exact parity with a *wire* KV cache needs matching
-left-pad offsets (encoding happens after RoPE rotation, so a coarse
-format quantises differently at shifted positions): with
-``page_size == max(prompt lengths)`` every scheduler bucket equals the
-lockstep pad width and the two paths see bit-identical caches. The pins
-below are built that way; CI runs this module under both
-``REPRO_KV_ATTN_KERNEL=0`` and ``=1`` so the oracle and interpret-kernel
-dispatch paths both stay gated.
+The scheduler must reproduce *solo* (batch-of-1) lockstep ``generate``
+token-for-token at temperature 0: scheduled prompts sit at absolute
+positions ``[0, plen)`` with no padding, exactly like a batch-of-1
+lockstep run — and unlike a *batched* lockstep run, which left-pads
+shorter prompts (encoding happens after RoPE rotation, so a coarse wire
+format quantises differently at shifted positions). That batch
+invariance is the contract prefix sharing relies on, and it holds with
+the prefix cache warm or cold. CI runs this module under both
+``REPRO_KV_ATTN_KERNEL=0`` and ``=1`` so the oracle and
+interpret-kernel dispatch paths both stay gated.
 """
 
 import dataclasses
@@ -62,9 +63,14 @@ def test_scheduler_matches_lockstep(base_cfg, params, kv_quant, use_kernel,
     cfg = dataclasses.replace(base_cfg, kv_quant=kv_quant)
     prompts = _prompts(cfg)
     eng = _engine(params, cfg)
-    lock = eng.generate_lockstep(prompts, max_new=4)
+    lock = [eng.generate_lockstep([p], max_new=4)[0] for p in prompts]
     sched = eng.generate(prompts, max_new=4)
     assert sched == lock, (kv_quant, use_kernel)
+    # resubmitting with the prefix tree warm must not change one token:
+    # shared pages hold the same post-RoPE wire words solo prefill made
+    sched2 = eng.generate(prompts, max_new=4)
+    assert sched2 == lock, (kv_quant, use_kernel, "warm prefix tree")
+    assert eng.scheduler().pool.stats().prefix_hit_tokens > 0
 
 
 # ---------------------------------------------------------------------------
@@ -109,8 +115,12 @@ def test_abandoned_stream_resumes_consistently(base_cfg, params):
     for _ in eng.run():                 # then drain
         pass
     assert [eng.result(r) for r in rids] == want
-    pool = eng.scheduler().pool
-    assert pool.pages_in_use() == 0
+    sched = eng.scheduler()
+    # only the prefix tree still holds pages after the drain; clearing
+    # it returns every page to the free list
+    assert sched.pool.pages_in_use() == sched.prefix.pages_held()
+    sched.prefix.clear()
+    assert sched.pool.pages_in_use() == 0
 
 
 def test_results_survive_scheduler_resize_and_forget(base_cfg, params):
@@ -153,15 +163,19 @@ def test_page_pressure_queues_and_completes(base_cfg, params):
     schedule."""
     cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
     prompts = _prompts(cfg)
-    # each request needs pages_for(16 + 3, 16) = 2 pages; 5 allocatable
-    # pages admit at most 2 requests concurrently
+    # each request needs pages_for(16 + 4 - 1, 16) = 2 worst-case pages;
+    # 5 allocatable pages bound the concurrently admitted set
     eng = _engine(params, cfg, num_pages=6, decode_batch=8)
     want = _engine(params, cfg).generate(prompts, max_new=4)
     got = eng.generate(prompts, max_new=4)
     assert got == want
-    pool = eng.scheduler().pool
-    assert pool.peak_pages_in_use() <= 5 - 1, \
+    sched = eng.scheduler()
+    pool = sched.pool
+    assert pool.peak_pages_in_use() <= pool.num_pages - 1, \
         "admission must respect the page budget"
+    # drained: whatever the prefix tree retained is the only usage left
+    assert pool.pages_free() == 5 - sched.prefix.pages_held()
+    sched.prefix.clear()
     assert pool.pages_free() == 5
 
 
@@ -200,15 +214,19 @@ def test_staggered_requests_with_early_eos_acceptance(base_cfg, params):
     eos = next(t for seq in mid for t in seq)
 
     eng = _engine(params, cfg, decode_batch=4, eos_id=eos)
-    lock = eng.generate_lockstep(prompts, max_new)
+    lock = [eng.generate_lockstep([p], max_new)[0] for p in prompts]
     sched = eng.generate(prompts, max_new)
-    assert sched == lock, "paged schedule must be token-identical"
+    assert sched == lock, "paged schedule must be token-identical (solo)"
     gen_lens = [len(o) - len(p) for o, p in zip(sched, prompts)]
     assert any(n < max_new for n in gen_lens), "no early EOS exercised"
 
-    pool = eng.scheduler().pool
+    scheduler = eng.scheduler()
+    pool = scheduler.pool
     ps = pool.page_size
-    # every page is back on the free list once the queue drains
+    # every page outside the prefix tree is back on the free list once
+    # the queue drains; clearing the tree returns the rest
+    assert pool.pages_in_use() == scheduler.prefix.pages_held()
+    scheduler.prefix.clear()
     assert pool.pages_free() == pool.num_pages - 1
     assert pool.pages_in_use() == 0
     # and peak concurrent usage beat the contiguous equivalent: a

@@ -1,11 +1,16 @@
-"""BENCH_codec schema gate: schema 5 + `blocks` on every kernel row.
+"""BENCH_codec schema gate: schema 6 + `blocks` + prefix serving rows.
 
     python tools/check_bench_schema.py BENCH_codec.smoke.json
 
 Run by `make bench-smoke` (and therefore `make check` / CI) right after
 the smoke bench writes its artifact, so a codec_json change that drops
-the per-row tuned-blocks record — or regresses the schema — fails the
-build instead of silently shipping an unparseable trajectory artifact.
+the per-row tuned-blocks record, the shared-prefix serving rows, or the
+schema itself fails the build instead of silently shipping an
+unparseable trajectory artifact. Schema 6 requires the serving section
+to carry the shared-prefix comparison: a cache-on row with TTFT fields
+and ``prefix_hit_rate > 0`` (the warm tree really served wire pages),
+and the matching cache-off baseline row. TTFT *magnitudes* are not
+gated — wall-clock comparisons belong in the artifact, not a CI assert.
 """
 
 import json
@@ -13,13 +18,16 @@ import sys
 
 KERNEL_SECTIONS = ("qmatmul", "lns_qmatmul", "kv_attention",
                    "kv_attention_paged")
+PREFIX_FIELDS = ("ttft_us_mean", "ttft_us_max", "prefix_hit_rate",
+                 "prefix_hit_tokens", "shared_prefix_tokens",
+                 "tokens_per_s")
 
 
 def check(path: str) -> None:
     with open(path) as f:
         doc = json.load(f)
-    assert doc.get("schema") == 5, \
-        f"{path}: schema {doc.get('schema')!r}, expected 5"
+    assert doc.get("schema") == 6, \
+        f"{path}: schema {doc.get('schema')!r}, expected 6"
     assert doc.get("autotune_mode") in ("0", "1", "force"), \
         f"{path}: missing/invalid autotune_mode"
     n_rows = 0
@@ -41,8 +49,26 @@ def check(path: str) -> None:
             f"{path}: roofline/{key} missing dominant term"
         assert pt.get("bound_us_v5e") is not None, \
             f"{path}: roofline/{key} missing bound"
-    print(f"# {path}: schema 5 ok — {n_rows} kernel rows with blocks, "
-          f"{len(roof)} roofline points")
+    serving = doc.get("serving") or {}
+    on_rows = {k: r for k, r in serving.items()
+               if k.startswith("prefix/") and k.endswith("/on")}
+    off_rows = {k: r for k, r in serving.items()
+                if k.startswith("prefix/") and k.endswith("/off")}
+    assert on_rows and off_rows, \
+        f"{path}: serving is missing the prefix/<fmt>/on|off row pair"
+    for key, row in {**on_rows, **off_rows}.items():
+        for field in PREFIX_FIELDS:
+            assert row.get(field) is not None, \
+                f"{path}: serving/{key} missing {field}"
+    for key, row in on_rows.items():
+        assert row["prefix_hit_rate"] > 0, \
+            f"{path}: serving/{key} hit rate 0 — warm tree served nothing"
+        assert key.replace("/on", "/off") in off_rows, \
+            f"{path}: serving/{key} has no cache-off baseline row"
+    print(f"# {path}: schema 6 ok — {n_rows} kernel rows with blocks, "
+          f"{len(roof)} roofline points, {len(on_rows)} prefix serving "
+          f"pair(s), hit_rate="
+          f"{[r['prefix_hit_rate'] for r in on_rows.values()]}")
 
 
 if __name__ == "__main__":
