@@ -26,23 +26,26 @@ kernel-parity:
 # jnp oracle (=0) and the interpret-mode Pallas kernel (=1). The env is
 # read at import, so each setting is its own pytest process. Covers the
 # parity pins, the scheduler fuzz (priorities / chunked prefill /
-# per-request sampling vs solo lockstep + key-schedule replay), and the
-# prefix-cache property harness (refcount/COW invariants, device-free).
+# per-request sampling / failure events vs solo lockstep + key-schedule
+# replay), the prefix-cache property harness (refcount/COW/quarantine
+# invariants, device-free), and the failure-model suite (preemption,
+# deadlines/cancel, NaR fault injection + chaos acceptance).
 serve-gate:
 	REPRO_KV_ATTN_KERNEL=0 $(PY) -m pytest -q tests/test_serve_scheduler.py \
 		tests/test_scheduler_fuzz.py tests/test_prefix_cache.py \
-		tests/test_page_pool.py
+		tests/test_page_pool.py tests/test_faults.py
 	REPRO_KV_ATTN_KERNEL=1 $(PY) -m pytest -q tests/test_serve_scheduler.py \
 		tests/test_scheduler_fuzz.py tests/test_prefix_cache.py \
-		tests/test_page_pool.py
+		tests/test_page_pool.py tests/test_faults.py
 
 # execute the fenced python snippets in the documentation (doctest-style
 # smoke: the docs cannot drift from the code silently) + the runnable
-# continuous-batching and shared-prefix examples
+# continuous-batching, shared-prefix and failure-model examples
 docs:
 	$(PY) tools/check_docs.py README.md docs/*.md
 	$(PY) examples/serve_continuous.py
 	$(PY) examples/serve_prefix.py
+	$(PY) examples/serve_faults.py
 
 bench:
 	$(PY) -m benchmarks.run
@@ -54,9 +57,10 @@ bench-json:
 # CI-sized pass over every BENCH_codec row (schema + dataflow gate on
 # CPU JAX; writes BENCH_codec.smoke.json, never the real artifact).
 # REPRO_AUTOTUNE=1 is lookup-only: CI validates the checked-in autotune
-# table without ever paying for a sweep. The gate asserts schema 6: a
+# table without ever paying for a sweep. The gate asserts schema 7: a
 # `blocks` entry on every kernel row + the shared-prefix serving row
-# pair with a nonzero warm-tree prefix_hit_rate.
+# pair with a nonzero warm-tree prefix_hit_rate + the serving_faults
+# rows (preemption fires when enabled, NaR injection is contained).
 bench-smoke:
 	REPRO_AUTOTUNE=1 $(PY) -m benchmarks.codec_json --smoke
 	$(PY) tools/check_bench_schema.py BENCH_codec.smoke.json

@@ -59,6 +59,15 @@ wire pages / prompt tokens submitted; the ``on`` row's rate is the gate
 — it must be > 0 on a warm tree) plus the peak ``shared_pages`` count
 (pages with more than one owner — the dedup the capacity math credits).
 
+Schema 7 additions: failure-model serving rows (``serving_faults``) —
+goodput under page-pressure overload with preemption enabled vs
+disabled (``overload/preempt_{on,off}``: wall time, goodput from
+completed requests only, TTFT p50/p99, the preemption count the gate
+pins ``>= 1`` on vs ``== 0`` off), and containment under seeded NaR
+wire-page injection (``inject/nar``: faults injected, owners poisoned,
+``token_parity`` — survivors bit-identical to a fault-free run — and
+the quarantined page count).
+
 ``--smoke`` (also ``run(smoke=True)``) shrinks every shape to
 CI-on-CPU size and writes ``BENCH_codec.smoke.json`` instead — a schema
 and dataflow gate (every row still exercises its real code path), not a
@@ -431,6 +440,113 @@ def _prefix_serving_rows(smoke: bool) -> dict:
     return out
 
 
+def _faults_serving_rows(smoke: bool) -> dict:
+    """Failure-model serving rows (schema 7). Overload: a pool sized for
+    one worst-case request takes low-priority traffic plus a late
+    high-priority arrival — with ``preempt=True`` the VIP evicts a
+    victim (which resumes bit-identically; the parity suites pin that)
+    and its TTFT drops; with ``preempt=False`` it waits head-of-line.
+    Goodput counts completed requests' tokens only. Injection: a seeded
+    ``FaultInjector`` writes one NaR word into a live wire page; the row
+    records the blast radius (owners poisoned, pages quarantined) and
+    ``token_parity`` — every surviving request bit-identical to a
+    fault-free lockstep run, the containment the chaos suite gates."""
+    import dataclasses
+    import statistics
+
+    import jax as _jax
+
+    from repro.configs import get_arch
+    from repro.models import model as _model
+    from repro.serve.engine import ServeEngine
+    from repro.serve.faults import FaultInjector
+    from repro.serve.paged import pages_for
+
+    base = get_arch("phi3-medium-14b").reduced
+    if smoke:
+        plen, max_new, ps, db = 8, 6, 8, 2
+    else:
+        plen, max_new, ps, db = 64, 32, 64, 4
+    rng = np.random.default_rng(2)
+    cfg = dataclasses.replace(base, kv_quant="takum8")
+    params = _model.init(_jax.random.PRNGKey(0), base)
+    prompts = [list(rng.integers(0, base.vocab, plen)) for _ in range(3)]
+    ppr = pages_for(plen + max_new - 1, ps)      # pages per request
+    out: dict = {}
+
+    def overload_round(preempt: bool):
+        eng = ServeEngine(params, cfg, max_len=plen + max_new,
+                          page_size=ps, decode_batch=db,
+                          num_pages=2 * ppr, preempt=preempt)
+        t0 = time.perf_counter()
+        rids = [eng.submit(p, max_new, priority=0) for p in prompts[:2]]
+        first: dict = {}
+        vip = None
+        for n, ev in enumerate(eng.run(), 1):
+            if ev.rid not in first:
+                first[ev.rid] = time.perf_counter() - t0
+            if vip is None and n >= 2:           # VIP lands mid-stream
+                vip = eng.submit(prompts[2], max_new, priority=5)
+                rids.append(vip)
+        dt = time.perf_counter() - t0
+        done = [r for r in rids if eng.status(r) == "done"]
+        good = sum(len(eng.result(r)) - plen for r in done)
+        return eng, rids, first, dt, done, good
+
+    for preempt in (True, False):
+        overload_round(preempt)                  # compile + warmup
+        eng, rids, first, dt, done, good = overload_round(preempt)
+        ttfts = sorted(first.values())
+        out[f"overload/preempt_{'on' if preempt else 'off'}"] = {
+            "n_requests": len(rids),
+            "max_new": max_new,
+            "page_size": ps,
+            "num_pages": 2 * ppr,
+            "us": round(dt * 1e6, 2),
+            "goodput_tokens_per_s": round(good / dt, 2),
+            "ttft_us_p50": round(statistics.median(ttfts) * 1e6, 2),
+            "ttft_us_p99": round(ttfts[-1] * 1e6, 2),
+            "preemptions": eng.scheduler().preemptions,
+            "completed": len(done),
+            "path": "scheduler",
+        }
+
+    eng = ServeEngine(params, cfg, max_len=plen + max_new, page_size=ps,
+                      decode_batch=db, num_pages=4 * ppr + 1,
+                      prefix_cache=False)
+    eng.generate([prompts[0]], max_new)          # compile warmup
+    rate, seed = 1.0, 0
+    t0 = time.perf_counter()
+    rids = [eng.submit(p, max_new) for p in prompts]
+    sched = eng.scheduler()
+    sched.injector = FaultInjector(sched.pool, rate=rate, seed=seed,
+                                   kind="nar", target="live", max_faults=1)
+    for _ in eng.run():
+        pass
+    dt = time.perf_counter() - t0
+    done = [r for r in rids if eng.status(r) == "done"]
+    poisoned = [r for r in rids if eng.status(r) == "poisoned"]
+    parity = all(
+        eng.result(r) == eng.generate_lockstep([prompts[i]], max_new)[0]
+        for i, r in enumerate(rids) if r in done)
+    out["inject/nar"] = {
+        "n_requests": len(rids),
+        "max_new": max_new,
+        "page_size": ps,
+        "fault_rate": rate,
+        "fault_seed": seed,
+        "kind": "nar",
+        "us": round(dt * 1e6, 2),
+        "injected": len(sched.injector.injected),
+        "poisoned": len(poisoned),
+        "unaffected": len(done),
+        "token_parity": parity,
+        "quarantined_pages": sched.pool.pages_quarantined(),
+        "path": "scheduler",
+    }
+    return out
+
+
 def run(print_fn=print, out_path: str | None = None,
         smoke: bool = False) -> dict:
     from benchmarks import roofline
@@ -446,7 +562,7 @@ def run(print_fn=print, out_path: str | None = None,
     if out_path is None:
         out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
     doc = {
-        "schema": 6,
+        "schema": 7,
         "smoke": smoke,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": jax.default_backend(),
@@ -460,6 +576,7 @@ def run(print_fn=print, out_path: str | None = None,
                                                        kv_t, paged_ps),
         "serving": {**_serving_section(smoke),
                     **_prefix_serving_rows(smoke)},
+        "serving_faults": _faults_serving_rows(smoke),
     }
     doc["roofline"] = roofline.kernel_points_from_bench(doc)
     with open(out_path, "w") as f:
@@ -490,6 +607,15 @@ def run(print_fn=print, out_path: str | None = None,
             extra = (f"tokens_per_s={row['tokens_per_s']} "
                      f"capacity_at_budget={row['capacity_at_budget']}")
         print_fn(csv_line(f"codec_json/serving/{key}", row["us"], extra))
+    for key, row in doc["serving_faults"].items():
+        if key.startswith("overload/"):
+            extra = (f"goodput_tokens_per_s={row['goodput_tokens_per_s']} "
+                     f"preemptions={row['preemptions']}")
+        else:
+            extra = (f"poisoned={row['poisoned']} "
+                     f"token_parity={row['token_parity']}")
+        print_fn(csv_line(f"codec_json/serving_faults/{key}", row["us"],
+                          extra))
     print_fn(f"# wrote {out_path}")
     return doc
 

@@ -57,7 +57,12 @@ class Watchdog:
         times = sorted(hb.step_time for hb in self.last.values())
         if not times:
             return []
-        median = times[len(times) // 2]
+        n = len(times)
+        # true median: even-length fleets average the middle pair — the
+        # upper-middle element alone biases the threshold high and can
+        # hide a straggler that *is* the upper-middle element
+        median = (times[n // 2] if n % 2
+                  else 0.5 * (times[n // 2 - 1] + times[n // 2]))
         return [h for h, hb in self.last.items()
                 if hb.step_time > self.straggle_factor * median]
 

@@ -25,7 +25,7 @@ quantisation (``quantize_weights``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional
+from typing import Callable, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -203,6 +203,9 @@ class ServeEngine:
     num_pages: Optional[int] = None   # None -> decode_batch full sequences
     decode_batch: int = 8             # packed decode width (slots)
     prefix_cache: bool = True         # radix-tree shared prompt pages
+    preempt: bool = True              # preempt low priority under pressure
+    now_fn: Optional[Callable[[], float]] = None  # scheduler clock
+                                      # (deadlines/watchdog; None = wall)
 
     def __post_init__(self):
         parse_kv_quant(self.cfg.kv_quant)  # reject typos before compiling
@@ -232,7 +235,11 @@ class ServeEngine:
             logits, cache = model.decode_step(params, tok, cfg, cache,
                                               pos=pos)
             toks, new_keys = sample_rows(logits, keys, temps, top_ps)
-            return toks[:, None], cache, new_keys
+            # per-row NaN flag: a corrupted (NaR) wire page read by this
+            # row's attention poisons its logits — the scheduler maps
+            # the flag back to the owning request and quarantines it
+            bad = jnp.any(jnp.isnan(logits), axis=-1)
+            return toks[:, None], cache, new_keys, bad
 
         self._prefill = jax.jit(_prefill)
         self._step = jax.jit(_step)
@@ -273,7 +280,7 @@ class ServeEngine:
         db = decode_batch or self.decode_batch
         mp = max_pages or max(pages_for(self.max_len, ps), 1)
         npg = num_pages or self.num_pages or (db * mp + 1)
-        key = (ps, mp, npg, db, self.prefix_cache)
+        key = (ps, mp, npg, db, self.prefix_cache, self.preempt)
         if self._sched is not None:
             if self._sched_key == key:
                 return self._sched
@@ -284,7 +291,8 @@ class ServeEngine:
         prev = self._sched
         self._sched = Scheduler(self, page_size=ps, max_pages=mp,
                                 num_pages=npg, decode_batch=db,
-                                prefix_cache=self.prefix_cache)
+                                prefix_cache=self.prefix_cache,
+                                preempt=self.preempt, now_fn=self.now_fn)
         if prev is not None:
             # a resize must not lose finished results or reuse rids
             self._sched.adopt_finished(prev)
@@ -294,21 +302,38 @@ class ServeEngine:
     def submit(self, prompt: List[int], max_new: int,
                eos_id: Optional[int] = None, *, priority: int = 0,
                temperature: Optional[float] = None, top_p: float = 1.0,
-               seed: Optional[int] = None) -> int:
+               seed: Optional[int] = None,
+               deadline_ms: Optional[float] = None) -> int:
         """Enqueue one request on the paged scheduler; returns a request
         id for :meth:`run`'s stream events and :meth:`result`. Raises
         ``repro.serve.paged.AdmissionError`` (naming the KV format and
         the page budget) when the request can never fit the pool.
 
         ``priority``: higher admits first (aged so low priorities are
-        never starved). ``temperature``/``top_p``: per-request sampling
+        never starved; under page pressure a strictly-higher priority
+        may preempt a running lower one — ``ServeEngine.preempt``).
+        ``temperature``/``top_p``: per-request sampling
         (``temperature=None`` inherits the engine's; 0 = greedy).
         ``seed``: per-request PRNG seed (``None`` derives a key from the
         engine seed and the request id, so resubmitting the same prompt
-        still draws fresh tokens)."""
+        still draws fresh tokens). ``deadline_ms``: total-latency bound
+        on the scheduler clock — a request past it is failed with a
+        terminal ``StreamEvent(status="timeout")``."""
         return self.scheduler().submit(
             prompt, max_new, eos_id=eos_id, priority=priority,
-            temperature=temperature, top_p=top_p, seed=seed)
+            temperature=temperature, top_p=top_p, seed=seed,
+            deadline_ms=deadline_ms)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel an in-flight request (pages released, terminal
+        ``status="cancelled"`` event emitted); False if it already
+        terminated."""
+        return self.scheduler().cancel(rid)
+
+    def status(self, rid: int) -> str:
+        """The request's lifecycle state (``queued``/``prefilling``/
+        ``active`` or a terminal status)."""
+        return self.scheduler().status(rid)
 
     def run(self) -> Iterator["StreamEvent"]:  # noqa: F821 (docs name)
         """Serve every submitted request to completion, streaming

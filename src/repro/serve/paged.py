@@ -121,6 +121,7 @@ class PageStats:
     hbm_bytes: int          # whole pool, all layers, K and V
     shared_pages: int       # pages with refcount > 1 (prefix dedup)
     prefix_hit_tokens: int  # prompt tokens served from shared pages
+    quarantined: int        # corrupted pages retired from circulation
 
 
 class PagePool:
@@ -152,6 +153,7 @@ class PagePool:
         # LIFO free list: hot pages get reused first (page 0 reserved)
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         self._refs: Dict[int, int] = {}
+        self._quarantined: set = set()
         self._peak = 0
         self._prefix_hit_tokens = 0
         # host mirrors of the per-slot table state (pushed on change)
@@ -225,7 +227,10 @@ class PagePool:
         self._refs[page] -= 1
         if self._refs[page] == 0:
             del self._refs[page]
-            self._free.append(page)
+            # quarantined pages never rejoin the free list: a corrupted
+            # wire page must not be handed to the next admission
+            if page not in self._quarantined:
+                self._free.append(page)
 
     def free(self, pages: Sequence[int]) -> None:
         """Unref each page (kept as the bulk-release spelling: with no
@@ -237,6 +242,42 @@ class PagePool:
         """Account ``n_tokens`` prompt positions served from shared
         pages instead of recomputed (``PageStats.prefix_hit_tokens``)."""
         self._prefix_hit_tokens += int(n_tokens)
+
+    # -- quarantine (fault containment) ------------------------------------
+
+    def quarantine(self, page: int) -> None:
+        """Mark ``page`` as corrupted: it is pulled out of circulation
+        permanently (until :meth:`release_quarantined`). A currently
+        free page leaves the free list now; an allocated page is left
+        to its remaining owners — their final ``unref`` retires it
+        instead of recycling it. Idempotent."""
+        if not 0 < page < self.num_pages:
+            raise PagePoolError(
+                f"quarantine of page {page}: not a poolable page id "
+                f"(scratch page 0 and ids >= {self.num_pages} excluded)")
+        if page in self._quarantined:
+            return
+        self._quarantined.add(page)
+        if page in self._free:
+            self._free.remove(page)
+
+    def pages_quarantined(self) -> int:
+        return len(self._quarantined)
+
+    def quarantined_pages(self) -> frozenset:
+        return frozenset(self._quarantined)
+
+    def release_quarantined(self) -> int:
+        """Operator repair hook: return quarantined pages that have no
+        remaining owners to the free list (their words are stale-but-
+        harmless once recycled — positions past ``pos`` are never read,
+        and a fresh owner overwrites from position 0). Pages still
+        referenced stay quarantined. Returns the count released."""
+        released = [p for p in self._quarantined if p not in self._refs]
+        for p in released:
+            self._quarantined.discard(p)
+            self._free.append(p)
+        return len(released)
 
     # -- memory accounting (registry bytes-per-element) --------------------
 
@@ -265,7 +306,8 @@ class PagePool:
                          peak_in_use=self._peak,
                          hbm_bytes=self.hbm_bytes(),
                          shared_pages=self.shared_pages(),
-                         prefix_hit_tokens=self._prefix_hit_tokens)
+                         prefix_hit_tokens=self._prefix_hit_tokens,
+                         quarantined=self.pages_quarantined())
 
     # -- block tables ------------------------------------------------------
 

@@ -206,6 +206,38 @@ class PrefixCache:
         while self.pool.pages_free() < pages_wanted and self.evict_one():
             pass
 
+    def evict_pages(self, pages) -> int:
+        """Evict every node holding a page in ``pages`` — fault
+        containment: a corrupted shared page must never be served to a
+        future admission. Each matching node's **entire subtree** goes
+        with it (descendants' KV attends into the corrupted positions,
+        and without their parent they are unreachable anyway); every
+        removed node drops its one pool reference. Quarantine the pages
+        *before* calling this so the unref retires rather than recycles
+        them. Returns the number of nodes removed."""
+        pages = set(int(p) for p in pages)
+        removed = 0
+
+        def _drop_subtree(node: _Node) -> int:
+            n = 1
+            for child in node.children.values():
+                n += _drop_subtree(child)
+            self.pool.unref(node.page)
+            return n
+
+        stack: List[Tuple[Dict[Tuple[int, ...], _Node], _Node]] = \
+            [(self._root, n) for n in self._root.values()]
+        while stack:
+            siblings, node = stack.pop()
+            if node.page in pages:
+                del siblings[node.chunk]
+                removed += _drop_subtree(node)
+            else:
+                stack.extend((node.children, c)
+                             for c in node.children.values())
+        self._nodes -= removed
+        return removed
+
     def clear(self) -> None:
         """Evict everything (drain-to-empty: after clear, a pool whose
         sequences have all released shows ``pages_in_use() == 0``)."""

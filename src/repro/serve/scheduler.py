@@ -51,6 +51,33 @@ categorical(sub, logits / temp)`` — and *independent of the schedule*:
 priorities and page pressure change when a token is produced, never its
 value.
 
+**Failure model** (``docs/serving.md`` has the full story): every
+request terminates in exactly one state of :data:`TERMINAL` —
+
+* **preemption**: when admission cannot secure a slot or pages, the
+  lowest-effective-priority *running* request (strictly below the
+  candidate) is preempted — pages unreferenced honoring COW refcounts,
+  request requeued at its original priority with its generated tokens
+  as a prompt extension (``Request.prefill_tokens``). Re-admission
+  rides the normal prefix-cache/chunked-prefill path, and because
+  prompts sit at absolute positions with post-RoPE wire words, the
+  resumed request's tokens are bit-identical to an uninterrupted run
+  (the per-request PRNG key survives on the host record);
+* **deadlines / cancellation**: ``submit(deadline_ms=...)`` and
+  :meth:`Scheduler.cancel` fail a request mid-flight — pages released,
+  slot cleared, a terminal ``StreamEvent(status="timeout"|"cancelled",
+  token=-1)`` emitted. Deadlines are checked once per tick against the
+  deterministic ``now_fn`` clock (the ``ft.watchdog`` idiom), which
+  also drives a scheduler heartbeat into a :class:`ft.watchdog.Watchdog`
+  so a stalled step is externally detectable (:meth:`stalled`);
+* **NaR quarantine**: corrupted wire pages (``repro.serve.faults``
+  injects them deterministically in tests) decode to NaN; the loop
+  checks per-row NaN-in-logits, maps the row to its owning request,
+  fails it with ``status="poisoned"``, quarantines its pages out of the
+  free list (``PagePool.quarantine``) and evicts them from the radix
+  tree (``PrefixCache.evict_pages``) — every other request continues
+  bit-exactly on its own pages.
+
 Compilation: one decode-step executable per (decode_batch, table-width)
 pool shape, one chunk-prefill executable per distinct contiguous-cache
 width (prompt pages + one slack page; the chunk length is always
@@ -61,18 +88,42 @@ writes are causally masked).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Tuple
+import time
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.ft.watchdog import Heartbeat, Watchdog
+from repro.serve.faults import injector_from_env
 from repro.serve.paged import AdmissionError, PagePool, pages_for
 from repro.serve.prefix import PrefixCache, PrefixPlan
 
-__all__ = ["Scheduler", "Request", "StreamEvent", "AGING_TICKS"]
+__all__ = ["Scheduler", "Request", "StreamEvent", "RequestFailed",
+           "AGING_TICKS", "TERMINAL"]
 
 # a queued request gains one effective priority level per this many
 # scheduler ticks: low-priority requests cannot starve forever
 AGING_TICKS = 32
+
+# every request ends in exactly one of these states; "done" is the only
+# successful one (the rest raise RequestFailed from result())
+TERMINAL = ("done", "timeout", "cancelled", "poisoned")
+
+
+class RequestFailed(RuntimeError):
+    """``result()`` of a request that terminated without completing.
+
+    Carries the terminal ``status`` and the tokens generated before the
+    failure (``tokens`` — a timed-out request's partial output is often
+    still useful to the caller)."""
+
+    def __init__(self, rid: int, status: str, tokens: List[int]):
+        super().__init__(
+            f"request {rid} terminated with status {status!r} after "
+            f"{len(tokens)} generated tokens")
+        self.rid = rid
+        self.status = status
+        self.tokens = tokens
 
 
 @dataclasses.dataclass
@@ -87,7 +138,8 @@ class Request:
     temperature: float = 0.0
     top_p: float = 1.0
     seed: Optional[int] = None
-    state: str = "queued"       # queued | prefilling | active | done
+    deadline: Optional[float] = None   # absolute now_fn() seconds
+    state: str = "queued"       # queued | prefilling | active | TERMINAL
     generated: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     pages: Tuple[int, ...] = ()
@@ -100,7 +152,18 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return self.state == "done"
+        """Terminated — successfully or not (see :data:`TERMINAL`)."""
+        return self.state in TERMINAL
+
+    @property
+    def prefill_tokens(self) -> List[int]:
+        """The token stream prefill must cover: the prompt, extended by
+        whatever was already generated. Fresh requests: just the prompt.
+        A *preempted* request resumes by prefilling this — absolute
+        positions + post-RoPE wire words make the recomputed KV
+        bit-identical to what it held before preemption, and the prefix
+        tree may serve most of it from the pages it donated earlier."""
+        return list(self.prompt) + list(self.generated)
 
     def output(self) -> List[int]:
         """Prompt + generated tokens (the lockstep ``generate`` shape)."""
@@ -109,10 +172,15 @@ class Request:
 
 @dataclasses.dataclass(frozen=True)
 class StreamEvent:
-    """One streamed token: ``done`` marks the request's last token."""
+    """One streamed token: ``done`` marks the request's last event.
+
+    ``status`` is ``"ok"`` on every token event; a request that fails
+    emits exactly one terminal event with ``token=-1``, ``done=True``
+    and ``status`` in ``("timeout", "cancelled", "poisoned")``."""
     rid: int
     token: int
     done: bool
+    status: str = "ok"
 
 
 class Scheduler:
@@ -125,7 +193,9 @@ class Scheduler:
 
     def __init__(self, engine, *, page_size: int, max_pages: int,
                  num_pages: int, decode_batch: int,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, preempt: bool = True,
+                 now_fn: Optional[Callable[[], float]] = None,
+                 stall_after: float = 60.0, injector="env"):
         from repro.models import transformer
         from repro.models.layers import ATTN_CHUNK_T
         if not transformer.paged_supported(engine.cfg):
@@ -154,13 +224,29 @@ class Scheduler:
         self._tick = 0
         self._plan_gather = None   # _secure_pages -> _start_prefill handoff
         self.prompt_tokens_submitted = 0
+        # failure-model state: deterministic clock (tests inject a fake
+        # one — the ft.watchdog idiom), a single-host watchdog fed one
+        # heartbeat per tick (an external observer calls stalled()), the
+        # buffer of terminal failure events awaiting the stream, the
+        # preemption policy switch + counter, and the optional fault
+        # injector ("env": built from REPRO_FAULT_RATE/_SEED/_KIND,
+        # which default to off)
+        self._now: Callable[[], float] = now_fn or time.monotonic
+        self.watchdog = Watchdog(1, dead_after=stall_after,
+                                 now_fn=self._now)
+        self._pending: List[StreamEvent] = []
+        self.preempt = preempt
+        self.preemptions = 0
+        self.injector = (injector_from_env(self.pool)
+                         if injector == "env" else injector)
 
     # -- queueing ----------------------------------------------------------
 
     def submit(self, prompt: List[int], max_new: int,
                eos_id: Optional[int] = None, *, priority: int = 0,
                temperature: Optional[float] = None, top_p: float = 1.0,
-               seed: Optional[int] = None) -> int:
+               seed: Optional[int] = None,
+               deadline_ms: Optional[float] = None) -> int:
         """Enqueue a request; returns its request id.
 
         Raises :class:`AdmissionError` immediately when the request can
@@ -169,6 +255,12 @@ class Scheduler:
         worst case — every prompt page must be resident at once for
         decode). Requests that merely have to wait for pages stay
         queued.
+
+        ``deadline_ms`` bounds the request's *total* latency: measured
+        on the scheduler clock from submit, a request (queued or
+        in-flight) past its deadline is failed with a terminal
+        ``StreamEvent(status="timeout")`` at the next tick and its pages
+        released.
         """
         prompt = list(prompt)
         if not prompt:
@@ -204,10 +296,14 @@ class Scheduler:
                 "raise num_pages or shorten the request")
         rid = self._next_rid
         self._next_rid += 1
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
         req = Request(rid=rid, prompt=prompt, max_new=max_new,
                       eos_id=self.engine.eos_id if eos_id is None else eos_id,
                       pages_needed=needed, priority=priority,
                       temperature=temperature, top_p=top_p, seed=seed,
+                      deadline=(None if deadline_ms is None
+                                else self._now() + deadline_ms / 1000.0),
                       submit_tick=self._tick)
         self._requests[rid] = req
         self._queue.append(req)
@@ -217,20 +313,50 @@ class Scheduler:
     def result(self, rid: int) -> List[int]:
         """Finished request's prompt + generated tokens. Records are
         retained until :meth:`forget` — long-lived serving loops should
-        forget after reading so host memory stays bounded."""
+        forget after reading so host memory stays bounded. Raises
+        :class:`RequestFailed` (carrying the status and partial tokens)
+        for a request that timed out, was cancelled, or was poisoned."""
         if rid not in self._requests:
             raise KeyError(f"unknown or forgotten request id {rid}")
         req = self._requests[rid]
         if not req.done:
             raise ValueError(f"request {rid} is {req.state}, not done")
+        if req.state != "done":
+            raise RequestFailed(rid, req.state, list(req.generated))
         return req.output()
 
+    def status(self, rid: int) -> str:
+        """The request's current state (lifecycle or :data:`TERMINAL`)."""
+        if rid not in self._requests:
+            raise KeyError(f"unknown or forgotten request id {rid}")
+        return self._requests[rid].state
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request mid-flight: pages released (COW refcounts
+        honored), decode slot cleared, a terminal
+        ``StreamEvent(status="cancelled")`` emitted at the next stream
+        drain. Returns False when the request already terminated (its
+        result stands); raises KeyError for unknown/forgotten ids."""
+        if rid not in self._requests:
+            raise KeyError(f"unknown or forgotten request id {rid}")
+        req = self._requests[rid]
+        if req.done:
+            return False
+        self._fail(req, "cancelled")
+        return True
+
     def forget(self, rid: int) -> None:
-        """Drop a finished request's record (no-op while it is queued
-        or active)."""
+        """Drop a request's record. An in-flight request is routed
+        through the cancel path first — forget can never leak pages or
+        strand a decode slot — and its buffered terminal event is
+        dropped with the record (nobody is listening for it)."""
         req = self._requests.get(rid)
-        if req is not None and req.done:
-            del self._requests[rid]
+        if req is None:
+            return
+        if not req.done:
+            self._fail(req, "cancelled")
+        self._pending = [e for e in self._pending if e.rid != rid]
+        del self._requests[rid]
 
     def adopt_finished(self, other: "Scheduler") -> None:
         """Carry another (idle) scheduler's finished records and rid
@@ -248,12 +374,86 @@ class Scheduler:
 
     def run(self) -> Iterator[StreamEvent]:
         """Drive the schedule until queue and batch drain, streaming
-        every generated token as a :class:`StreamEvent`."""
-        while self._queue or any(s is not None for s in self._slots):
+        every generated token as a :class:`StreamEvent` (terminal
+        failure events included — every submitted request produces
+        exactly one ``done=True`` event)."""
+        while (self._queue or self._pending
+               or any(s is not None for s in self._slots)):
             self._tick += 1
+            self._heartbeat()
+            if self.injector is not None:
+                self.injector.step(self._tick)
+            self._check_deadlines()
+            yield from self._drain_pending()
             self._admit()
             yield from self._prefill_tick()
             yield from self._decode_step()
+            yield from self._drain_pending()
+
+    def _drain_pending(self) -> Iterator[StreamEvent]:
+        events, self._pending = self._pending, []
+        yield from events
+
+    # -- failure paths -----------------------------------------------------
+
+    def _fail(self, req: Request, status: str) -> None:
+        """Terminate ``req`` with a failure ``status``: drop it from
+        the queue or its decode slot, unreference its pages (COW
+        refcounts honored — shared pages live on under their other
+        owners), commit the cleared block-table row to the device, and
+        buffer the terminal stream event."""
+        if req.state == "queued":
+            self._queue.remove(req)
+        for p in req.pages:
+            self.pool.unref(p)
+        req.pages = ()
+        req._contig = None
+        if req.slot >= 0:
+            self.pool.clear(req.slot)
+            self._slots[req.slot] = None
+            req.slot = -1
+            # the freed pages may be reallocated this very tick: the
+            # device table must not keep them installed for this slot
+            self.pool.push_tables()
+        req.state = status
+        self._pending.append(StreamEvent(req.rid, -1, True, status))
+
+    def _poison(self, req: Request) -> None:
+        """Fail ``req`` as poisoned and quarantine every page of its
+        block table (private *and* shared — corruption detected in its
+        logits cannot be localized to one page, so its whole working
+        set is retired; lossy for sharers, never unsafe). Quarantine
+        runs *before* tree eviction and page release: the unrefs must
+        retire these pages, not recycle them."""
+        pages = set(req.pages)
+        for p in pages:
+            self.pool.quarantine(p)
+        if self.prefix is not None:
+            self.prefix.evict_pages(pages)
+        self._fail(req, "poisoned")
+
+    def _check_deadlines(self) -> None:
+        now = self._now()
+        for req in list(self._requests.values()):
+            if (not req.done and req.deadline is not None
+                    and now >= req.deadline):
+                self._fail(req, "timeout")
+
+    def _heartbeat(self) -> None:
+        """One scheduler-liveness beat per tick into the watchdog: an
+        external observer (another thread, an operator loop) calls
+        :meth:`stalled` — if a compiled step wedges, beats stop and the
+        watchdog reports the scheduler dead after ``stall_after``."""
+        now = self._now()
+        prev = self.watchdog.last.get(0)
+        self.watchdog.beat(Heartbeat(
+            host=0, step=self._tick, t=now,
+            step_time=now - prev.t if prev is not None else 0.0))
+
+    def stalled(self) -> bool:
+        """Whether the serving loop has stopped beating (no tick for
+        longer than ``stall_after`` on the scheduler clock)."""
+        return not self.watchdog.healthy()
 
     # -- admission ---------------------------------------------------------
 
@@ -270,7 +470,11 @@ class Scheduler:
 
         Stops at the first request that does not fit (head-of-line
         blocking by design: admitting smaller later requests first
-        would starve large ones — aging already orders the queue)."""
+        would starve large ones — aging already orders the queue),
+        *unless* preemption can make room: a running request with
+        strictly lower effective priority is preempted (pages released,
+        requeued with its generated tokens as prompt extension) and
+        admission retries."""
         while self._queue:
             order = sorted(self._queue,
                            key=lambda r: (-self._effective_priority(r),
@@ -279,22 +483,75 @@ class Scheduler:
             slot = next((i for i, s in enumerate(self._slots) if s is None),
                         None)
             if slot is None or not self._secure_pages(req):
+                if (self.preempt and
+                        self._preempt_for(self._effective_priority(req))):
+                    continue
+                if slot is not None and all(s is None for s in self._slots):
+                    # a free slot, nothing running to ever release pages,
+                    # and the tree already evicted as far as it can
+                    # (_secure_pages ran evict_for): the pool — shrunk
+                    # by quarantine — can never serve this request.
+                    # Fail it definitively instead of spinning forever.
+                    self._fail(req, "cancelled")
+                    continue
                 return
             self._queue.remove(req)
             self._start_prefill(req, slot)
+
+    def _preempt_for(self, min_eff: int) -> bool:
+        """Preempt the lowest-effective-priority running request if it
+        is *strictly* below ``min_eff`` (never preempt for an equal or
+        lower candidate — that would ping-pong). Youngest rid breaks
+        ties. Returns whether a victim was preempted."""
+        running = [s for s in self._slots if s is not None]
+        if not running:
+            return False
+        victim = min(running, key=lambda r: (self._effective_priority(r),
+                                             -r.rid))
+        if self._effective_priority(victim) >= min_eff:
+            return False
+        self._preempt(victim)
+        return True
+
+    def _preempt(self, req: Request) -> None:
+        """Kick ``req`` out of its slot back onto the queue: pages
+        unreferenced (tree-donated pages survive under the radix tree,
+        so re-admission largely re-*references* instead of recomputes),
+        generated tokens kept — they rejoin as a prompt extension via
+        ``prefill_tokens``. ``submit_tick`` resets so aging restarts:
+        a fresh victim cannot immediately age past its preemptor."""
+        for p in req.pages:
+            self.pool.unref(p)
+        req.pages = ()
+        req._contig = None
+        req._cursor = 0
+        req._first_page = 0
+        if req.slot >= 0:
+            self.pool.clear(req.slot)
+            self._slots[req.slot] = None
+            req.slot = -1
+            self.pool.push_tables()
+        req.state = "queued"
+        req.submit_tick = self._tick
+        self._queue.append(req)
+        self.preemptions += 1
 
     def _secure_pages(self, req: Request) -> bool:
         """Reserve ``req``'s worst-case pages: shared prefix pages by
         reference, the private remainder from the free list (evicting
         LRU tree leaves as needed). On success ``req.pages`` holds the
         full page list (shared head + private tail) and ``req._cursor``/
-        ``req._first_page`` mark where prefill starts."""
-        pool, plen = self.pool, len(req.prompt)
-        plan = (self.prefix.plan(req.prompt) if self.prefix is not None
+        ``req._first_page`` mark where prefill starts. Planning runs
+        over ``prefill_tokens``: a preempted request's earlier tree
+        donations (prompt *and* generated pages) count as prefix hits
+        on re-admission."""
+        pool = self.pool
+        stream = req.prefill_tokens
+        plan = (self.prefix.plan(stream) if self.prefix is not None
                 else PrefixPlan(shared=(), cow_src=None, suffix_start=0))
         n_private = req.pages_needed - len(plan.shared)
         if self.prefix is not None:
-            self.prefix.acquire(req.prompt, plan)
+            self.prefix.acquire(stream, plan)
             if plan.cow_src is not None:
                 # pin the carved-out page for the gather below — eviction
                 # under page pressure must not free what we are reading
@@ -324,7 +581,7 @@ class Scheduler:
         eng = self.engine
         plan, _ = self._plan_gather
         ps = self.page_size
-        plen = len(req.prompt)
+        plen = len(req.prefill_tokens)
         # one slack page past the prompt pages: the final (or COW) chunk
         # is right-padded to ps, and its padding appends may run past
         # the prompt bucket — dynamic_update_slice must never clamp
@@ -354,9 +611,18 @@ class Scheduler:
 
     def _prefill_tick(self) -> Iterator[StreamEvent]:
         """One ``page_size`` chunk for every prefilling slot. A request
-        whose last chunk lands samples its first token, scatters its
-        computed pages into the pool, donates its full prompt pages to
-        the radix tree, and joins the decode batch.
+        whose last chunk lands samples its next token, scatters its
+        computed pages into the pool, donates its full prefill pages to
+        the radix tree, and joins the decode batch. (For a fresh
+        request the prefill stream is its prompt and the sampled token
+        is token 0; a *resumed* request prefills prompt + generated and
+        the sample continues exactly where decode left off — same
+        logits position, same persisted PRNG key.)
+
+        NaN in the completion logits (a quarantine-worthy corrupted
+        page gathered from the prefix tree, or injected into the pool
+        mid-prefill) poisons the request here, before it ever joins the
+        decode batch.
 
         Events are buffered and yielded only after ``push_tables`` has
         committed the new device state: a consumer that abandons the
@@ -371,8 +637,9 @@ class Scheduler:
             req = self._slots[slot]
             if req is None or req.state != "prefilling":
                 continue
-            plen = len(req.prompt)
-            chunk = req.prompt[req._cursor:req._cursor + ps]
+            stream = req.prefill_tokens
+            plen = len(stream)
+            chunk = stream[req._cursor:req._cursor + ps]
             tokens = np.zeros((1, ps), np.int32)
             tokens[0, :len(chunk)] = chunk
             row, req._contig = eng._prefill_chunk(
@@ -382,7 +649,12 @@ class Scheduler:
             req._cursor += len(chunk)
             if req._cursor < plen:
                 continue
-            # prompt complete: sample token 0 under the request policy
+            if bool(np.isnan(np.asarray(row)).any()):
+                # corrupted wire words reached these logits: NaR decode
+                # pins corruption -> NaN, so this request is poisoned
+                self._poison(req)
+                continue
+            # prefill complete: sample the next token under the policy
             if req.temperature > 0.0:
                 keys = self._request_key(req)[None]
             else:
@@ -399,7 +671,7 @@ class Scheduler:
                 first_page=req._first_page)
             req._contig = None
             if self.prefix is not None:
-                self.prefix.insert(req.prompt, req.pages[:plen // ps])
+                self.prefix.insert(stream, req.pages[:plen // ps])
             req.state = "active"
             req.generated.append(tok0)
             self.pool.assign(slot, req.pages, pos=plen)
@@ -440,7 +712,7 @@ class Scheduler:
         # snapshot pos: the pool mutates its host mirror in place right
         # after dispatch (advance), and a zero-copy transfer would alias
         pos = jnp.asarray(self.pool.pos[:, None].copy())  # (W, 1) RoPE
-        tok_next, cache, new_keys = eng._step_paged(
+        tok_next, cache, new_keys, bad = eng._step_paged(
             eng.params, jnp.asarray(tok), self.pool.cache, pos,
             jnp.stack(key_rows), jnp.asarray(temps), jnp.asarray(top_ps))
         self.pool.cache = cache
@@ -455,10 +727,18 @@ class Scheduler:
         # releases mid-batch, pipelines with a one-step-stale read
         # instead (engine.generate_lockstep)
         toks = np.asarray(tok_next)
+        # NaN-in-logits per batch row, read only for *active* rows (idle
+        # and prefilling slots ride the scratch page and may be NaN
+        # legitimately): a bad row means this request's block-table
+        # pages fed corruption into its logits — poison exactly it
+        bad_rows = np.asarray(bad)
         events = []
         released = False
         for i in active:
             req = self._slots[i]
+            if bad_rows[i]:
+                self._poison(req)
+                continue
             t = int(toks[i, 0])
             req.generated.append(t)
             done = t == req.eos_id or len(req.generated) >= req.max_new

@@ -1,0 +1,519 @@
+"""Failure model of the continuous-batching scheduler: preemption under
+page pressure, deadlines/cancellation, NaR wire-page quarantine — and
+the chaos acceptance pin.
+
+The contracts under test (``docs/serving.md`` "Failure model"):
+
+  * preemption changes *when* a request's tokens are produced, never
+    their values — a preempted-and-resumed temp-0 request is
+    bit-identical to an uninterrupted solo lockstep run (absolute
+    positions + post-RoPE wire words make the recomputed KV exact, and
+    the per-request PRNG key survives on the host record);
+  * every submitted request terminates in exactly one TERMINAL state
+    with exactly one ``done=True`` stream event — under overload,
+    cancellation, deadlines, and seeded bit-corruption of live wire
+    pages;
+  * a corrupted (NaR) page poisons exactly the requests that read it:
+    their pages are quarantined out of the free list and evicted from
+    the radix tree, every other request's tokens are untouched;
+  * after a full drain the pool partitions into free + tree-held +
+    quarantined — no leaks, no corrupted page ever re-enters
+    circulation.
+
+The chaos pin runs under both ``REPRO_KV_ATTN_KERNEL`` dispatch paths
+(the same monkeypatch as ``test_serve_scheduler``).
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_arch
+from repro.models import model
+from repro.serve.engine import ServeEngine
+from repro.serve.faults import FaultInjector, injector_from_env
+from repro.serve.scheduler import TERMINAL, RequestFailed, StreamEvent
+
+PS = 8
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def base_cfg():
+    return get_arch("phi3-medium-14b").reduced
+
+
+@pytest.fixture(scope="module")
+def params(base_cfg):
+    return model.init(jax.random.PRNGKey(0), base_cfg)
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("max_len", 48)
+    kw.setdefault("page_size", PS)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _prompts(cfg, lens, seed=3):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(0, cfg.vocab, n)) for n in lens]
+
+
+def _drain(sched_or_eng):
+    return list(sched_or_eng.run())
+
+
+def _assert_pool_clean(sched):
+    """After a drain: only the tree and quarantine hold pages; clearing
+    the tree leaves exactly the quarantined pages out of the free list."""
+    pool = sched.pool
+    if sched.prefix is not None:
+        assert pool.pages_in_use() == sched.prefix.pages_held()
+        sched.prefix.clear()
+    retired = sum(1 for p in pool.quarantined_pages()
+                  if pool.refcount(p) == 0)
+    assert pool.pages_in_use() == 0
+    assert pool.pages_free() == pool.num_pages - 1 - retired
+    assert not (set(pool._free) & pool.quarantined_pages()), \
+        "quarantined page on the free list"
+
+
+# ---------------------------------------------------------------------------
+# preemption under page pressure
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["oracle", "kernel"])
+def test_preempted_request_is_bit_identical(base_cfg, params, use_kernel,
+                                            monkeypatch):
+    """A high-priority submit under page pressure preempts the running
+    low-priority request; both finish, and the preempted request's
+    tokens are bit-identical to an uninterrupted solo lockstep run."""
+    from repro.models import layers as L
+    monkeypatch.setattr(L, "KV_ATTN_KERNEL", use_kernel)
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    low, high = _prompts(cfg, lens=(PS, PS), seed=7)
+    # each request needs pages_for(8 + 6 - 1, 8) = 2 pages; 3 allocatable
+    # pages cannot hold both at once -> the prio-5 submit must preempt
+    eng = _engine(params, cfg, num_pages=4, decode_batch=2)
+    want_low = eng.generate_lockstep([low], 6)[0]
+    want_high = eng.generate_lockstep([high], 6)[0]
+
+    r_low = eng.submit(low, 6, priority=0)
+    sched = eng.scheduler()
+    stream = sched.run()
+    got = []
+    for ev in stream:
+        got.append(ev)
+        if sum(e.rid == r_low for e in got) == 2:
+            break
+    r_high = eng.submit(high, 6, priority=5)
+    got += list(stream)
+
+    assert sched.preemptions >= 1, "page pressure never forced preemption"
+    assert eng.result(r_low) == want_low, (use_kernel, "preempted request")
+    assert eng.result(r_high) == want_high
+    # exactly one done event per request, all ok-status
+    done_evs = [e for e in got if e.done]
+    assert sorted(e.rid for e in done_evs) == sorted([r_low, r_high])
+    assert all(e.status == "ok" for e in got)
+    _assert_pool_clean(sched)
+
+
+def test_preempt_disabled_keeps_head_of_line_blocking(base_cfg, params):
+    """With preempt=False the same overload schedule just queues the
+    high-priority request behind the running one — no preemption, same
+    tokens."""
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    low, high = _prompts(cfg, lens=(PS, PS), seed=7)
+    eng = _engine(params, cfg, num_pages=4, decode_batch=2, preempt=False)
+    want_low = eng.generate_lockstep([low], 6)[0]
+    r_low = eng.submit(low, 6, priority=0)
+    sched = eng.scheduler()
+    stream = sched.run()
+    seen = 0
+    for ev in stream:
+        seen += ev.rid == r_low
+        if seen == 2:
+            break
+    r_high = eng.submit(high, 6, priority=5)
+    _ = list(stream)
+    assert sched.preemptions == 0
+    assert eng.result(r_low) == want_low
+    assert eng.result(r_high) == eng.generate_lockstep([high], 6)[0]
+
+
+def test_preemption_resumes_sampled_key_schedule(base_cfg, params):
+    """The per-request PRNG key survives preemption: a sampled request
+    resumed mid-generation draws exactly the tokens it would have drawn
+    uninterrupted (the key schedule is positional, not wall-clock)."""
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    low, high = _prompts(cfg, lens=(PS, PS), seed=19)
+    free = _engine(params, cfg, num_pages=16, decode_batch=2)
+    r = free.submit(low, 6, temperature=0.8, seed=123)
+    _drain(free)
+    want = free.result(r)
+
+    eng = _engine(params, cfg, num_pages=4, decode_batch=2)
+    r_low = eng.submit(low, 6, temperature=0.8, seed=123)
+    sched = eng.scheduler()
+    stream = sched.run()
+    seen = 0
+    for ev in stream:
+        seen += ev.rid == r_low
+        if seen == 2:
+            break
+    eng.submit(high, 6, priority=5)
+    _ = list(stream)
+    assert sched.preemptions >= 1
+    assert eng.result(r_low) == want, "preemption perturbed the key schedule"
+
+
+# ---------------------------------------------------------------------------
+# cancellation / deadlines / forget
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_queued_and_inflight(base_cfg, params):
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    p1, p2, p3 = _prompts(cfg, lens=(PS, 11, 5), seed=5)
+    eng = _engine(params, cfg, decode_batch=2)
+    want2 = eng.generate_lockstep([p2], 5)[0]
+
+    # queued cancel: never admitted, pages never allocated
+    r1 = eng.submit(p1, 5)
+    assert eng.cancel(r1) is True
+    assert eng.status(r1) == "cancelled"
+    with pytest.raises(RequestFailed) as ei:
+        eng.result(r1)
+    assert ei.value.status == "cancelled" and ei.value.tokens == []
+
+    # in-flight cancel: pages released mid-decode, neighbour untouched
+    r2 = eng.submit(p2, 5)
+    r3 = eng.submit(p3, 5)
+    sched = eng.scheduler()
+    stream = sched.run()
+    events = [next(stream)]           # r1's buffered terminal event first
+    assert events[0] == StreamEvent(r1, -1, True, "cancelled")
+    while not any(e.rid == r3 and e.status == "ok" for e in events):
+        events.append(next(stream))
+    assert eng.cancel(r3) is True
+    events += list(stream)
+    term3 = [e for e in events if e.rid == r3 and e.done]
+    assert len(term3) == 1 and term3[0].status == "cancelled"
+    assert term3[0].token == -1
+    assert eng.result(r2) == want2, "cancel perturbed the neighbour"
+    assert eng.cancel(r2) is False    # already terminated: result stands
+    with pytest.raises(KeyError):
+        eng.cancel(10_000)
+    _assert_pool_clean(sched)
+
+
+def test_deadline_timeout_on_fake_clock(base_cfg, params):
+    """Deadlines ride the injectable scheduler clock: advancing a fake
+    clock past submit + deadline_ms times the request out mid-flight
+    with its partial tokens preserved (a bit-exact prefix of the
+    uninterrupted run); the undeadlined neighbour is untouched."""
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    p1, p2 = _prompts(cfg, lens=(PS, 11), seed=9)
+    clk = FakeClock()
+    eng = _engine(params, cfg, decode_batch=2, now_fn=clk)
+    want1 = eng.generate_lockstep([p1], 8)[0]
+    want2 = eng.generate_lockstep([p2], 8)[0]
+    r1 = eng.submit(p1, 8, deadline_ms=500.0)
+    r2 = eng.submit(p2, 8)
+    sched = eng.scheduler()
+    stream = sched.run()
+    events = []
+    while sum(e.rid == r1 for e in events) < 3:
+        events.append(next(stream))
+    clk.t = 0.6                        # past r1's 0.5 s deadline
+    events += list(stream)
+    term1 = [e for e in events if e.rid == r1 and e.done]
+    assert len(term1) == 1 and term1[0].status == "timeout"
+    assert eng.status(r1) == "timeout"
+    with pytest.raises(RequestFailed) as ei:
+        eng.result(r1)
+    gen1 = ei.value.tokens
+    assert 0 < len(gen1) < 8, "timeout should interrupt mid-generation"
+    assert gen1 == want1[len(p1):len(p1) + len(gen1)], \
+        "partial tokens must be a bit-exact prefix"
+    assert eng.result(r2) == want2
+    _assert_pool_clean(sched)
+
+
+def test_queued_deadline_and_zero_validation(base_cfg, params):
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    (p1,) = _prompts(cfg, lens=(PS,), seed=2)
+    clk = FakeClock()
+    eng = _engine(params, cfg, now_fn=clk)
+    with pytest.raises(ValueError, match="deadline_ms"):
+        eng.submit(p1, 2, deadline_ms=0)
+    rid = eng.submit(p1, 4, deadline_ms=100.0)
+    clk.t = 1.0                        # expires while still queued
+    events = _drain(eng)
+    assert [e for e in events if e.rid == rid] == \
+        [StreamEvent(rid, -1, True, "timeout")]
+    with pytest.raises(RequestFailed) as ei:
+        eng.result(rid)
+    assert ei.value.tokens == []
+
+
+def test_forget_inflight_routes_through_cancel(base_cfg, params):
+    """forget() of an in-flight request must release its pages and free
+    its slot (the old behaviour silently kept it running and leaked the
+    record); its buffered terminal event dies with the record."""
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    p1, p2 = _prompts(cfg, lens=(PS, 9), seed=13)
+    eng = _engine(params, cfg, decode_batch=2)
+    want2 = eng.generate_lockstep([p2], 5)[0]
+    r1 = eng.submit(p1, 5)
+    r2 = eng.submit(p2, 5)
+    sched = eng.scheduler()
+    stream = sched.run()
+    events = [next(stream), next(stream)]
+    eng.forget(r1)
+    with pytest.raises(KeyError, match="forgotten"):
+        eng.result(r1)
+    events += list(stream)
+    assert not any(e.rid == r1 and e.done for e in events), \
+        "forgotten request leaked a terminal event"
+    assert eng.result(r2) == want2
+    assert sched.pending() == 0
+    _assert_pool_clean(sched)
+
+
+# ---------------------------------------------------------------------------
+# wire-page fault injection + NaR quarantine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["oracle", "kernel"])
+def test_nar_injection_poisons_only_the_owner(base_cfg, params, use_kernel,
+                                              monkeypatch):
+    """One seeded NaR fault in a live wire page: the owning request is
+    failed as poisoned and its pages quarantined; every other request's
+    tokens are bit-identical to the fault-free run."""
+    from repro.models import layers as L
+    monkeypatch.setattr(L, "KV_ATTN_KERNEL", use_kernel)
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    prompts = _prompts(cfg, lens=(PS, 11, 6), seed=21)
+    # prefix sharing off: pages are private, so exactly one request
+    # reads the corrupted page (sharing is chaos-pin territory below)
+    eng = _engine(params, cfg, decode_batch=2, prefix_cache=False)
+    want = [eng.generate_lockstep([p], 6)[0] for p in prompts]
+    rids = [eng.submit(p, 6) for p in prompts]
+    sched = eng.scheduler()
+    sched.injector = FaultInjector(sched.pool, rate=1.0, seed=0,
+                                   kind="nar", target="live", max_faults=1)
+    events = _drain(sched)
+
+    assert len(sched.injector.injected) == 1
+    faulted = sched.injector.faulted_pages()
+    poisoned = [r for r in rids if sched.status(r) == "poisoned"]
+    assert len(poisoned) == 1, "exactly one private-page owner reads it"
+    term = {r: [e for e in events if e.rid == r and e.done] for r in rids}
+    for r in rids:
+        assert len(term[r]) == 1, "exactly one terminal event each"
+    assert term[poisoned[0]][0].status == "poisoned"
+    with pytest.raises(RequestFailed, match="poisoned"):
+        eng.result(poisoned[0])
+    # quarantine: the poisoned request's whole working set is retired,
+    # the corrupted page among it, and none of it is on the free list
+    assert faulted <= sched.pool.quarantined_pages()
+    # the unpoisoned requests are bit-identical to the fault-free run
+    for r, w in zip(rids, want):
+        if r not in poisoned:
+            assert eng.result(r) == w, "fault leaked across block tables"
+    _assert_pool_clean(sched)
+
+
+def test_poisoned_shared_page_evicted_from_tree(base_cfg, params):
+    """Corruption in a tree-donated page: the poisoned request's
+    quarantine evicts the page (and its subtree) from the radix tree,
+    so a warm resubmit recomputes instead of inheriting corruption."""
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    (prompt,) = _prompts(cfg, lens=(2 * PS,), seed=4)
+    eng = _engine(params, cfg, decode_batch=2)
+    want = eng.generate_lockstep([prompt], 4)[0]
+    r1 = eng.submit(prompt, 4)
+    sched = eng.scheduler()
+    sched.injector = FaultInjector(sched.pool, rate=1.0, seed=3,
+                                   kind="nar", target="live", max_faults=1)
+    _drain(sched)
+    assert sched.status(r1) == "poisoned"
+    held = sched.prefix.pages_held()
+    # no quarantined page is reachable through the tree
+    tree_pages = set()
+    stack = list(sched.prefix._root.values())
+    while stack:
+        n = stack.pop()
+        tree_pages.add(n.page)
+        stack.extend(n.children.values())
+    assert len(tree_pages) == held
+    assert not (tree_pages & sched.pool.quarantined_pages())
+    # warm resubmit on the cleaned tree reproduces the fault-free tokens
+    sched.injector = None
+    r2 = eng.submit(prompt, 4)
+    _drain(sched)
+    assert eng.result(r2) == want
+    _assert_pool_clean(sched)
+
+
+def test_injector_determinism_and_env_gate(base_cfg, params, monkeypatch):
+    """Same (seed, rate) -> same fault sites; REPRO_FAULT_RATE unset or
+    0 builds no injector, set builds one with the env seed/kind."""
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    eng = _engine(params, cfg, decode_batch=2, prefix_cache=False)
+    (p,) = _prompts(cfg, lens=(PS,), seed=1)
+
+    def run_once():
+        e = _engine(params, cfg, decode_batch=2, prefix_cache=False)
+        e.submit(p, 5)
+        s = e.scheduler()
+        s.injector = FaultInjector(s.pool, rate=1.0, seed=42, kind="nar",
+                                   target="live", max_faults=2)
+        _drain(s)
+        return [(r.tick, r.slot, r.page, r.node, r.key, r.rep, r.offset)
+                for r in s.injector.injected]
+
+    assert run_once() == run_once(), "seeded injection must replay exactly"
+
+    monkeypatch.delenv("REPRO_FAULT_RATE", raising=False)
+    assert injector_from_env(eng.scheduler().pool) is None
+    monkeypatch.setenv("REPRO_FAULT_RATE", "0")
+    assert injector_from_env(eng.scheduler().pool) is None
+    monkeypatch.setenv("REPRO_FAULT_RATE", "0.5")
+    monkeypatch.setenv("REPRO_FAULT_SEED", "7")
+    monkeypatch.setenv("REPRO_FAULT_KIND", "flip")
+    inj = injector_from_env(eng.scheduler().pool)
+    assert (inj.rate, inj.seed, inj.kind) == (0.5, 7, "flip")
+    with pytest.raises(ValueError, match="kind"):
+        FaultInjector(eng.scheduler().pool, kind="zap")
+
+
+def test_unservable_after_quarantine_fails_definitively(base_cfg, params):
+    """Quarantine can shrink the pool below a queued request's worst
+    case: the scheduler must fail it with a terminal status instead of
+    spinning forever (nothing running will ever release pages)."""
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    (p,) = _prompts(cfg, lens=(PS,), seed=6)
+    eng = _engine(params, cfg, num_pages=4, decode_batch=2)
+    sched = eng.scheduler()
+    for page in (1, 2):                 # 3 allocatable -> only 1 left
+        sched.pool.quarantine(page)
+    rid = eng.submit(p, 6)              # needs 2 pages: can never fit
+    events = _drain(sched)
+    assert sched.status(rid) == "cancelled"
+    assert [e for e in events if e.rid == rid] == \
+        [StreamEvent(rid, -1, True, "cancelled")]
+    assert sched.pool.release_quarantined() == 2
+    rid2 = eng.submit(p, 6)             # repaired pool serves again
+    _drain(sched)
+    assert eng.result(rid2) == eng.generate_lockstep([p], 6)[0]
+
+
+# ---------------------------------------------------------------------------
+# scheduler heartbeat -> watchdog stall detection
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_heartbeat_drives_watchdog(base_cfg, params):
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    (p,) = _prompts(cfg, lens=(PS,), seed=8)
+    clk = FakeClock()
+    eng = _engine(params, cfg, now_fn=clk)
+    eng.submit(p, 3)
+    sched = eng.scheduler()
+    assert sched.stalled(), "no tick yet: the loop has never beaten"
+    _drain(sched)
+    assert not sched.stalled()
+    assert sched.watchdog.last[0].step == sched._tick, \
+        "heartbeat must carry the scheduler tick"
+    clk.t += sched.watchdog.dead_after + 1.0   # loop wedged: beats stop
+    assert sched.stalled()
+
+
+# ---------------------------------------------------------------------------
+# the chaos acceptance pin
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["oracle", "kernel"])
+def test_chaos_overload_injection_acceptance(base_cfg, params, use_kernel,
+                                             monkeypatch):
+    """ISSUE 8 acceptance: overload schedule (priorities forcing
+    preemption), a mid-flight cancel, a deadline, and seeded NaR
+    injection — every request terminates with a definite status, the
+    pool ends with all non-quarantined pages free, and every request
+    that *completed* is bit-identical to a fault-free solo lockstep
+    run. Both attention dispatch paths."""
+    from repro.models import layers as L
+    monkeypatch.setattr(L, "KV_ATTN_KERNEL", use_kernel)
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+    lens = (PS, 11, 2 * PS, 6, 13, PS)
+    prios = (0, 0, 1, 0, 0)              # the prio-5 request lands mid-run
+    prompts = _prompts(cfg, lens=lens, seed=17)
+    clk = FakeClock()
+    # 5 allocatable pages vs 6 requests needing 1-3 pages each: overload
+    eng = _engine(params, cfg, num_pages=6, decode_batch=2, now_fn=clk)
+    want = [eng.generate_lockstep([p], 5)[0] for p in prompts]
+
+    rids = [eng.submit(p, 5, priority=pr, deadline_ms=(3000.0 if i == 4
+                                                       else None))
+            for i, (p, pr) in enumerate(zip(prompts[:5], prios))]
+    sched = eng.scheduler()
+    sched.injector = FaultInjector(sched.pool, rate=0.3, seed=11,
+                                   kind="nar", target="live", max_faults=1)
+    events = []
+    cancelled = vip = False
+    for ev in sched.run():
+        events.append(ev)
+        clk.t += 1.0                     # ~1 s per event: rid 4 times out
+        if not cancelled and len(events) >= 4:
+            eng.cancel(rids[1])
+            cancelled = True
+        if not vip and len(events) >= 6:
+            # a prio-5 arrival against a full pool: must preempt
+            rids.append(eng.submit(prompts[5], 5, priority=5))
+            vip = True
+
+    # 1) definite status for every request, exactly one terminal event
+    statuses = {r: sched.status(r) for r in rids}
+    assert set(statuses.values()) <= set(TERMINAL)
+    for r in rids:
+        assert sum(e.rid == r and e.done for e in events) == 1, (r, events)
+    assert statuses[rids[1]] == "cancelled"
+    assert statuses[rids[4]] == "timeout"
+    assert sched.preemptions >= 1, "overload never exercised preemption"
+    assert sched.injector.injected, "injection never fired"
+
+    # 2) every completed request is bit-identical to fault-free lockstep
+    completed = [r for r in rids if statuses[r] == "done"]
+    assert completed, "chaos killed every request — schedule too brutal"
+    for r, w in zip(rids, want):
+        if statuses[r] == "done":
+            assert eng.result(r) == w, (r, use_kernel)
+
+    # 3) partial tokens of failed requests are bit-exact prefixes too
+    for r, w, p in zip(rids, want, prompts):
+        if statuses[r] in ("timeout", "cancelled"):
+            try:
+                eng.result(r)
+            except RequestFailed as ex:
+                assert ex.tokens == w[len(p):len(p) + len(ex.tokens)], r
+
+    # 4) pool partition: free + tree + quarantined, nothing leaked
+    _assert_pool_clean(sched)

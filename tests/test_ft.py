@@ -34,6 +34,42 @@ def test_watchdog_straggler_detection():
     assert wd.stragglers() == [3]
 
 
+def test_watchdog_even_fleet_median_regression():
+    """Even-length fleets must use the true median (mean of the middle
+    pair). The old upper-middle shortcut put the threshold at 1.2 * 2.0
+    = 2.4 here and flagged nobody — with the true median 1.5 the
+    threshold is 1.8 and both slow hosts (one of them the upper-middle
+    element itself) are caught."""
+    clk = FakeClock()
+    wd = Watchdog(4, straggle_factor=1.2, now_fn=clk)
+    for h, st in enumerate([1.0, 1.0, 2.0, 2.1]):
+        wd.beat(Heartbeat(host=h, step=1, t=0.0, step_time=st))
+    assert sorted(wd.stragglers()) == [2, 3]
+
+
+def test_watchdog_empty_and_partial_fleet():
+    """No beats yet: every host is dead, nobody straggles (no median to
+    compare against). A partial fleet judges stragglers only among the
+    hosts that have beaten, and still reports the silent ones dead."""
+    clk = FakeClock()
+    wd = Watchdog(3, dead_after=10.0, now_fn=clk)
+    assert wd.stragglers() == []
+    assert wd.dead_hosts() == [0, 1, 2]
+    assert not wd.healthy()
+    wd.beat(Heartbeat(host=1, step=1, t=0.0, step_time=1.0))
+    assert wd.stragglers() == []        # a fleet of one has no outliers
+    assert wd.dead_hosts() == [0, 2]
+    wd.beat(Heartbeat(host=2, step=1, t=0.0, step_time=9.0))
+    # two hosts, factor 2.0: threshold = 2 * (a + b) / 2 = a + b, which
+    # strictly exceeds either sample — a two-host fleet can never flag
+    assert wd.stragglers() == []
+    wd.beat(Heartbeat(host=0, step=1, t=0.0, step_time=1.0))
+    # three hosts [1, 1, 9]: odd median 1, threshold 2 -> host 2 flagged
+    assert wd.stragglers() == [2]
+    assert wd.dead_hosts() == []
+    assert wd.healthy()
+
+
 def test_elastic_remesh_plan():
     # lose a host from 512: largest pow2 data axis that fits
     plan = plan_elastic_remesh(512 - 8, model_axis=16)

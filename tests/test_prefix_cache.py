@@ -194,6 +194,157 @@ def test_refcount_invariants_under_random_schedule(num_pages, schedule):
 
 
 # ---------------------------------------------------------------------------
+# quarantine: poisoned pages leave circulation, partition gains "retired"
+# ---------------------------------------------------------------------------
+
+
+def _poison(sim, rid):
+    """The scheduler's poison protocol, mirrored: quarantine FIRST (so
+    every subsequent unref retires instead of recycles), then evict the
+    corrupted subtrees from the radix tree, then release the owner."""
+    pages = set(sim.live[rid])
+    for p in pages:
+        sim.pool.quarantine(p)
+    sim.prefix.evict_pages(pages)
+    sim.release(rid)
+
+
+def _check_quarantine(sim):
+    """Quarantine-aware invariant battery. The two-way free/in-use
+    partition becomes three-way: retired pages (quarantined with no
+    remaining owners) are in neither set, and neither the free list nor
+    the radix tree may ever serve a quarantined page."""
+    pool = sim.pool
+    tree_pages = _tree_pages(sim.prefix)
+    quarantined = set(pool.quarantined_pages())
+    assert not (set(tree_pages) & quarantined), \
+        "radix tree still serves a quarantined page"
+    expected = collections.Counter(tree_pages)
+    for pages in sim.live.values():
+        expected.update(pages)
+    in_use = set(expected)
+    assert 0 not in in_use and 0 not in quarantined
+    for p in in_use:
+        assert pool.refcount(p) == expected[p], (p, expected[p])
+    retired = len(quarantined - in_use)
+    assert pool.pages_in_use() == len(in_use)
+    assert pool.pages_free() + pool.pages_in_use() + retired \
+        == pool.num_pages - 1, "free/in-use/retired must partition the pool"
+    assert pool.stats().quarantined == len(quarantined)
+    drained = pool.alloc(pool.pages_free())
+    assert not (set(drained) & quarantined), \
+        "free list handed out a quarantined page"
+    assert not (set(drained) & in_use)
+    pool.free(drained)
+
+
+@settings(max_examples=80, deadline=None)
+@given(num_pages=st.integers(6, 24),
+       schedule=st.lists(st.tuples(st.integers(0, 9), st.integers(0, 7),
+                                   st.integers(0, 7)),
+                         min_size=4, max_size=40))
+def test_quarantine_invariants_under_random_schedule(num_pages, schedule):
+    """The refcount schedule with poison in the mix: op <= 4 submits,
+    op 5 releases, op 6 poisons a live request (quarantine + tree evict
+    + release), op 7 evicts an LRU leaf, op 8 clears the tree and
+    sometimes runs the operator repair hook, op 9 resubmits an earlier
+    prompt (warm hits over a tree that may have lost subtrees). After
+    the final drain, release_quarantined() must refill the pool
+    completely — no page is ever leaked, even through poisoning."""
+    sim = _Sim(num_pages)
+    history = []
+    for op, a, b in schedule:
+        if op <= 4:
+            prompt = _prompt(a, b)
+            history.append(prompt)
+            sim.admit(prompt, max_new=1 + b % 6)
+        elif op == 5 and sim.live:
+            rids = sorted(sim.live)
+            sim.release(rids[b % len(rids)])
+        elif op == 6 and sim.live:
+            rids = sorted(sim.live)
+            _poison(sim, rids[b % len(rids)])
+        elif op == 7:
+            sim.prefix.evict_one()
+        elif op == 8:
+            sim.prefix.clear()
+            if b % 2:
+                sim.pool.release_quarantined()
+        elif op == 9 and history:
+            sim.admit(history[b % len(history)], max_new=1 + a % 6)
+        _check_quarantine(sim)
+    for rid in sorted(sim.live):
+        sim.release(rid)
+        _check_quarantine(sim)
+    sim.prefix.clear()
+    assert sim.pool.pages_in_use() == 0
+    sim.pool.release_quarantined()
+    assert sim.pool.pages_quarantined() == 0
+    assert sim.pool.pages_free() == num_pages - 1, \
+        "repair hook must refill the pool completely"
+
+
+def test_quarantine_deterministic_lifecycle():
+    pool = _pool(num_pages=8)
+    with pytest.raises(PagePoolError, match="not a poolable"):
+        pool.quarantine(0)                       # scratch page
+    with pytest.raises(PagePoolError, match="not a poolable"):
+        pool.quarantine(8)                       # beyond the pool
+    pages = pool.alloc(3)
+    p = pages[0]
+    pool.quarantine(p)
+    pool.quarantine(p)                           # idempotent
+    assert pool.pages_quarantined() == 1
+    assert pool.quarantined_pages() == frozenset({p})
+    # still referenced: stays in-use, owners read it until they detect
+    assert pool.pages_in_use() == 3
+    assert pool.release_quarantined() == 0, "referenced pages stay put"
+    pool.unref(p)                                # final owner: retire it
+    assert pool.pages_in_use() == 2
+    assert pool.pages_free() == 8 - 1 - 2 - 1    # scratch, live, retired
+    # a currently-free page leaves the free list immediately
+    free_page = next(iter(set(range(1, 8)) - set(pages)))
+    before = pool.pages_free()
+    pool.quarantine(free_page)
+    assert pool.pages_free() == before - 1
+    drained = pool.alloc(pool.pages_free())
+    assert free_page not in drained and p not in drained
+    pool.free(drained)
+    # repair: both unreferenced quarantined pages return to circulation
+    assert pool.release_quarantined() == 2
+    assert pool.pages_quarantined() == 0
+    assert pool.pages_free() == 8 - 1 - 2
+
+
+def test_evict_pages_removes_whole_subtrees():
+    """Evicting a corrupted page must also drop every descendant node:
+    a child's KV was computed by attending to the corrupted ancestor, so
+    a warm hit through it would serve poisoned state with a clean page
+    id. The sibling stream shares no pages and must survive."""
+    sim = _Sim(num_pages=24)
+    long_p = BASES[0][:3 * PS]
+    other = BASES[1][:PS]
+    r1 = sim.admit(long_p, max_new=2)
+    r2 = sim.admit(other, max_new=2)
+    assert sim.prefix.pages_held() == 4          # 3-page chain + 1 node
+    head = sim.live[r1][0]                       # root of the long chain
+    removed = sim.prefix.evict_pages({head})
+    assert removed == 3, "descendants of the corrupted page must go too"
+    assert sim.prefix.pages_held() == 1          # the sibling stream
+    # sibling still warm (full hit: all but the COW carve-out token)
+    assert sim.prefix.plan(other).hit_tokens == PS - 1
+    assert sim.prefix.plan(long_p).hit_tokens == 0
+    # table refs survived the tree eviction; no quarantine in this test,
+    # so releasing recycles the pages straight back to the free list
+    _check(sim)
+    sim.release(r1)
+    sim.release(r2)
+    sim.prefix.clear()
+    assert sim.pool.pages_in_use() == 0
+    assert sim.pool.pages_free() == 24 - 1
+
+
+# ---------------------------------------------------------------------------
 # plans: COW carves exactly one page, mid-page divergence carves none
 # ---------------------------------------------------------------------------
 

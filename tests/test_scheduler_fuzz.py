@@ -184,6 +184,81 @@ def test_greedy_rows_consume_no_randomness(base_cfg, params):
 
 
 # ---------------------------------------------------------------------------
+# pin 3: failure-event fuzz — cancels, deadlines, preempting arrivals
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["oracle", "kernel"])
+def test_fuzz_failure_events_keep_parity(base_cfg, params, use_kernel,
+                                         monkeypatch):
+    """Failure events layered on the random mixes — a cancel at a random
+    stream position, random per-request deadlines on a fake clock, and a
+    late high-priority arrival that may preempt — must never corrupt the
+    survivors. Invariants, per trial: every request lands in exactly one
+    terminal state with exactly one done event; completed requests stay
+    bit-identical to solo lockstep; failed requests' partial tokens are
+    bit-exact prefixes of lockstep; the pool drains to empty."""
+    from repro.models import layers as L
+    from repro.serve.scheduler import RequestFailed, TERMINAL
+    monkeypatch.setattr(L, "KV_ATTN_KERNEL", use_kernel)
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+
+    class FakeClock:
+        def __init__(self):
+            self.t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    for trial in range(2):
+        rng = np.random.default_rng(500 + trial)
+        clk = FakeClock()
+        eng = _engine(params, cfg, decode_batch=2, num_pages=8, now_fn=clk)
+        prompts, max_news, prios = _random_batch(rng, cfg, n=5)
+        deadlines = [None if rng.random() < 0.5
+                     else float(rng.integers(2, 30)) * 1000.0
+                     for _ in range(5)]
+        rids = [eng.submit(p, m, priority=pr, deadline_ms=d)
+                for p, m, pr, d in zip(prompts, max_news, prios, deadlines)]
+        victim = rids[int(rng.integers(0, 5))]
+        cancel_at = int(rng.integers(1, 8))
+        vip = None
+        events = []
+        for ev in eng.run():
+            events.append(ev)
+            clk.t += float(rng.random())         # 0..1 s between events
+            if len(events) == cancel_at:
+                eng.cancel(victim)               # False if already done
+            if vip is None and len(events) >= 3:
+                vip = eng.submit(prompts[0][:3], 2, priority=9)
+                rids.append(vip)
+                prompts.append(prompts[0][:3])
+                max_news.append(2)
+
+        statuses = {r: eng.status(r) for r in rids}
+        assert set(statuses.values()) <= set(TERMINAL), (trial, statuses)
+        for rid in rids:
+            assert sum(1 for e in events if e.rid == rid and e.done) == 1, \
+                (trial, rid, statuses[rid])
+        for rid, p, m in zip(rids, prompts, max_news):
+            want = eng.generate_lockstep([p], m)[0]
+            if statuses[rid] == "done":
+                assert eng.result(rid) == want, (trial, rid, use_kernel)
+            else:
+                with pytest.raises(RequestFailed) as exc:
+                    eng.result(rid)
+                got = exc.value.tokens
+                assert got == want[len(p):len(p) + len(got)], \
+                    (trial, rid, statuses[rid])
+        sched = eng.scheduler()
+        assert sched.pending() == 0
+        sched.prefix.clear()                 # tree retention ends here
+        assert sched.pool.pages_in_use() == 0
+        assert sched.pool.pages_free() == sched.pool.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
 # admission: never-fitting requests fail loudly at submit(), no leaks
 # ---------------------------------------------------------------------------
 

@@ -1,4 +1,4 @@
-"""BENCH_codec schema gate: schema 6 + `blocks` + prefix serving rows.
+"""BENCH_codec schema gate: schema 7 + `blocks` + prefix + fault rows.
 
     python tools/check_bench_schema.py BENCH_codec.smoke.json
 
@@ -9,8 +9,13 @@ schema itself fails the build instead of silently shipping an
 unparseable trajectory artifact. Schema 6 requires the serving section
 to carry the shared-prefix comparison: a cache-on row with TTFT fields
 and ``prefix_hit_rate > 0`` (the warm tree really served wire pages),
-and the matching cache-off baseline row. TTFT *magnitudes* are not
-gated — wall-clock comparisons belong in the artifact, not a CI assert.
+and the matching cache-off baseline row. Schema 7 adds the
+``serving_faults`` section: the overload pair must show preemption
+actually firing when enabled (``preemptions >= 1`` on, ``== 0`` off)
+and the injection row must show containment (``poisoned >= 1`` with
+``token_parity`` true — survivors bit-identical to a fault-free run).
+TTFT and goodput *magnitudes* are not gated — wall-clock comparisons
+belong in the artifact, not a CI assert.
 """
 
 import json
@@ -21,13 +26,19 @@ KERNEL_SECTIONS = ("qmatmul", "lns_qmatmul", "kv_attention",
 PREFIX_FIELDS = ("ttft_us_mean", "ttft_us_max", "prefix_hit_rate",
                  "prefix_hit_tokens", "shared_prefix_tokens",
                  "tokens_per_s")
+OVERLOAD_FIELDS = ("n_requests", "us", "goodput_tokens_per_s",
+                   "ttft_us_p50", "ttft_us_p99", "preemptions",
+                   "completed", "path")
+INJECT_FIELDS = ("n_requests", "us", "fault_rate", "fault_seed",
+                 "injected", "poisoned", "unaffected", "token_parity",
+                 "quarantined_pages", "path")
 
 
 def check(path: str) -> None:
     with open(path) as f:
         doc = json.load(f)
-    assert doc.get("schema") == 6, \
-        f"{path}: schema {doc.get('schema')!r}, expected 6"
+    assert doc.get("schema") == 7, \
+        f"{path}: schema {doc.get('schema')!r}, expected 7"
     assert doc.get("autotune_mode") in ("0", "1", "force"), \
         f"{path}: missing/invalid autotune_mode"
     n_rows = 0
@@ -65,10 +76,34 @@ def check(path: str) -> None:
             f"{path}: serving/{key} hit rate 0 — warm tree served nothing"
         assert key.replace("/on", "/off") in off_rows, \
             f"{path}: serving/{key} has no cache-off baseline row"
-    print(f"# {path}: schema 6 ok — {n_rows} kernel rows with blocks, "
+    faults = doc.get("serving_faults") or {}
+    for key in ("overload/preempt_on", "overload/preempt_off",
+                "inject/nar"):
+        assert key in faults, f"{path}: serving_faults missing {key!r} row"
+    for key in ("overload/preempt_on", "overload/preempt_off"):
+        for field in OVERLOAD_FIELDS:
+            assert faults[key].get(field) is not None, \
+                f"{path}: serving_faults/{key} missing {field}"
+    assert faults["overload/preempt_on"]["preemptions"] >= 1, \
+        f"{path}: preempt_on row saw no preemption — the VIP never evicted"
+    assert faults["overload/preempt_off"]["preemptions"] == 0, \
+        f"{path}: preempt_off row preempted — the toggle is broken"
+    nar = faults["inject/nar"]
+    for field in INJECT_FIELDS:
+        assert nar.get(field) is not None, \
+            f"{path}: serving_faults/inject/nar missing {field}"
+    assert nar["poisoned"] >= 1, \
+        f"{path}: injection poisoned nobody — NaR detection is dead"
+    assert nar["token_parity"] is True, \
+        f"{path}: a surviving request diverged — containment is broken"
+    assert nar["quarantined_pages"] >= 1, \
+        f"{path}: poisoned pages were not quarantined"
+    print(f"# {path}: schema 7 ok — {n_rows} kernel rows with blocks, "
           f"{len(roof)} roofline points, {len(on_rows)} prefix serving "
           f"pair(s), hit_rate="
-          f"{[r['prefix_hit_rate'] for r in on_rows.values()]}")
+          f"{[r['prefix_hit_rate'] for r in on_rows.values()]}, "
+          f"preemptions={faults['overload/preempt_on']['preemptions']}, "
+          f"poisoned={nar['poisoned']} (parity ok)")
 
 
 if __name__ == "__main__":
