@@ -8,9 +8,10 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 # tier-1 tests + interpret-mode kernel parity + doc-snippet smoke + the
 # CI-sized bench schema gate + both dispatch paths of the paged serving
-# stack (the kernel parity suites are part of tier-1; all are also
-# runnable standalone below)
-check: test kernel-parity docs bench-smoke serve-gate
+# stack + the distributed selftest at 1 and 8 forced host devices (the
+# kernel parity suites are part of tier-1; all are also runnable
+# standalone below)
+check: test kernel-parity docs bench-smoke serve-gate dist-selftest
 
 test:
 	$(PY) -m pytest -x -q
@@ -33,10 +34,12 @@ kernel-parity:
 serve-gate:
 	REPRO_KV_ATTN_KERNEL=0 $(PY) -m pytest -q tests/test_serve_scheduler.py \
 		tests/test_scheduler_fuzz.py tests/test_prefix_cache.py \
-		tests/test_page_pool.py tests/test_faults.py
+		tests/test_page_pool.py tests/test_faults.py \
+		tests/test_serve_sharded.py
 	REPRO_KV_ATTN_KERNEL=1 $(PY) -m pytest -q tests/test_serve_scheduler.py \
 		tests/test_scheduler_fuzz.py tests/test_prefix_cache.py \
-		tests/test_page_pool.py tests/test_faults.py
+		tests/test_page_pool.py tests/test_faults.py \
+		tests/test_serve_sharded.py
 
 # execute the fenced python snippets in the documentation (doctest-style
 # smoke: the docs cannot drift from the code silently) + the runnable
@@ -46,6 +49,7 @@ docs:
 	$(PY) examples/serve_continuous.py
 	$(PY) examples/serve_prefix.py
 	$(PY) examples/serve_faults.py
+	$(PY) examples/serve_sharded.py
 
 bench:
 	$(PY) -m benchmarks.run
@@ -57,10 +61,12 @@ bench-json:
 # CI-sized pass over every BENCH_codec row (schema + dataflow gate on
 # CPU JAX; writes BENCH_codec.smoke.json, never the real artifact).
 # REPRO_AUTOTUNE=1 is lookup-only: CI validates the checked-in autotune
-# table without ever paying for a sweep. The gate asserts schema 7: a
+# table without ever paying for a sweep. The gate asserts schema 8: a
 # `blocks` entry on every kernel row + the shared-prefix serving row
 # pair with a nonzero warm-tree prefix_hit_rate + the serving_faults
-# rows (preemption fires when enabled, NaR injection is contained).
+# rows (preemption fires when enabled, NaR injection is contained) +
+# the serving_sharded rows (compressed collectives move strictly fewer
+# interconnect bytes than f32; tp=8 normalized throughput >= tp=1).
 bench-smoke:
 	REPRO_AUTOTUNE=1 $(PY) -m benchmarks.codec_json --smoke
 	$(PY) tools/check_bench_schema.py BENCH_codec.smoke.json
@@ -71,5 +77,9 @@ bench-smoke:
 autotune:
 	REPRO_AUTOTUNE=force $(PY) -m repro.kernels.autotune $(AUTOTUNE_FLAGS)
 
+# the collective/sharding selftest at both ends of the forced
+# host-device range: 1 (size-1 identity collectives, the laptop case)
+# and 8 (the ring + param-spec + annotate checks the serving mesh uses)
 dist-selftest:
-	$(PY) -m repro.dist.selftest
+	REPRO_HOST_DEVICES=1 $(PY) -m repro.dist.selftest
+	REPRO_HOST_DEVICES=8 $(PY) -m repro.dist.selftest

@@ -68,6 +68,20 @@ wire-page injection (``inject/nar``: faults injected, owners poisoned,
 ``token_parity`` — survivors bit-identical to a fault-free run — and
 the quarantined page count).
 
+Schema 8 additions: sharded serving rows
+(``serving_sharded["tp{1,2,4,8}/{on,off}"]``) — the packed decode step
+over a forced-host-device tensor-parallel mesh at tp in {1, 2, 4, 8}
+with compressed collectives on (takum16 wire) and off, run in a
+subprocess (the XLA host-device count must be set before jax imports).
+Each row carries wall and device-normalized throughput (``wall * tp``;
+the forced devices time-slice one CPU core, so normalization is what
+the gate reads — the ``normalization`` field says so), the analytic
+ring-interconnect byte census per step (compression scales it by
+``wire_bits/32``), and the per-device pool shard bytes. Gates
+(``tools/check_bench_schema.py``): compress-on rows move strictly
+fewer interconnect bytes than their f32 twins, and tp=8 normalized
+throughput >= tp=1.
+
 ``--smoke`` (also ``run(smoke=True)``) shrinks every shape to
 CI-on-CPU size and writes ``BENCH_codec.smoke.json`` instead — a schema
 and dataflow gate (every row still exercises its real code path), not a
@@ -547,6 +561,35 @@ def _faults_serving_rows(smoke: bool) -> dict:
     return out
 
 
+def _sharded_serving_rows(smoke: bool) -> dict:
+    """Sharded serving rows (schema 8), measured by
+    ``benchmarks/serve_sharded.py`` in a subprocess: forcing the XLA
+    host-platform device count only works before jax initializes, and
+    this process imported jax long ago. The child prints its row dict
+    as the last stdout line; ``#``-prefixed progress lines above it
+    surface in our output on failure."""
+    import os
+    import subprocess
+    import sys
+
+    from repro.launch.env import host_env
+
+    script = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "serve_sharded.py")
+    root = os.path.dirname(os.path.dirname(script))
+    env = host_env(8)
+    env["REPRO_HOST_DEVICES"] = "8"
+    env.setdefault("PYTHONPATH", os.path.join(root, "src"))
+    cmd = [sys.executable, script] + (["--smoke"] if smoke else [])
+    out = subprocess.run(cmd, cwd=root, env=env, capture_output=True,
+                         text=True, timeout=3000)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"serve_sharded.py failed ({out.returncode}):\n"
+            f"{out.stdout}\n{out.stderr}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
 def run(print_fn=print, out_path: str | None = None,
         smoke: bool = False) -> dict:
     from benchmarks import roofline
@@ -562,7 +605,7 @@ def run(print_fn=print, out_path: str | None = None,
     if out_path is None:
         out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
     doc = {
-        "schema": 7,
+        "schema": 8,
         "smoke": smoke,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": jax.default_backend(),
@@ -577,6 +620,7 @@ def run(print_fn=print, out_path: str | None = None,
         "serving": {**_serving_section(smoke),
                     **_prefix_serving_rows(smoke)},
         "serving_faults": _faults_serving_rows(smoke),
+        "serving_sharded": _sharded_serving_rows(smoke),
     }
     doc["roofline"] = roofline.kernel_points_from_bench(doc)
     with open(out_path, "w") as f:
@@ -616,6 +660,12 @@ def run(print_fn=print, out_path: str | None = None,
                      f"token_parity={row['token_parity']}")
         print_fn(csv_line(f"codec_json/serving_faults/{key}", row["us"],
                           extra))
+    for key, row in doc["serving_sharded"].items():
+        print_fn(csv_line(
+            f"codec_json/serving_sharded/{key}", row["us"],
+            f"tokens_per_s={row['tokens_per_s']} "
+            f"interconnect_bytes_per_step="
+            f"{row['interconnect_bytes_per_step']}"))
     print_fn(f"# wrote {out_path}")
     return doc
 

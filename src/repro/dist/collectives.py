@@ -46,8 +46,20 @@ def wire_roundtrip(x, spec: Optional[QuantSpec]) -> Tuple[jnp.ndarray,
     ``spec=None`` is the uncompressed wire: exact, zero residual. Takum's
     +-sqrt(e)^255 dynamic range means gradient tensors need no scale
     side-channel, so ``scale='none'`` specs are the intended usage.
+
+    ``spec`` may be either a ``core.quant.QuantSpec`` or a registry
+    ``formats.FormatSpec`` (duck-typed on ``encode_tile``) — the serving
+    stack compresses TP activations with the same wire formats its page
+    pools use, so byte accounting comes from one registry.
     """
-    if spec is None or spec.fmt == "none":
+    if spec is None:
+        return x, jnp.zeros_like(x)
+    if hasattr(spec, "encode_tile"):  # registry FormatSpec
+        if spec.is_identity:
+            return x, jnp.zeros_like(x)
+        y = spec.decode_tile(spec.encode_tile(x)).astype(x.dtype)
+        return y, x - y
+    if spec.fmt == "none":
         return x, jnp.zeros_like(x)
     y = dequantize(quantize(x, spec), dtype=x.dtype)
     return y, x - y

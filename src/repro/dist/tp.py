@@ -1,0 +1,168 @@
+"""Tensor-parallel activation seams for the sharded serving step.
+
+``serve/shard.py`` runs the whole decode/prefill step as one
+``jit(shard_map(...))`` over a ``("data", "tensor")`` mesh: attention
+QKV and the MLP up-projections are column-sharded on the ``tensor``
+axis (each device owns ``H/tp`` query heads, ``Hkv/tp`` KV heads and
+``d_ff/tp`` hidden channels), so the only cross-device traffic of a
+step is at the three projection seams this module hooks:
+
+* ``attn_out`` — the ``out @ wo`` seam after attention;
+* ``mlp_out``  — the ``hid @ w2`` seam after the MLP nonlinearity;
+* ``unembed_rows`` — the logit matmul, batch-row-sharded over ``data``.
+
+Two TP modes, chosen by the :class:`TPContext`:
+
+* ``"gather"`` (default): ``wo``/``w2`` stay **replicated** and the
+  column-sharded activation is all-gathered
+  (``collectives.ring_all_gather``) before the full matmul. Per-head
+  attention and per-channel projections contract over the full model
+  dim, so with no wire compression the result is the *same arithmetic*
+  as the single-device step — the bit-exact parity contract
+  (``docs/serving.md``).
+* ``"psum"``: ``wo``/``w2`` are **row-sharded** and the partial
+  products are summed with ``collectives.ring_all_reduce`` — fewer
+  bytes per seam (``d_model`` vs ``H*hd``/``d_ff`` columns) but a
+  different summation order than one device, so parity is token-level,
+  not bit-level.
+
+Wire compression (``TPContext.spec``, a registry ``FormatSpec`` or a
+``QuantSpec``) rides the collectives so interconnect bytes are n/32 of
+f32. Error-feedback residuals are carried **per call-site**: the hooks
+read/write ``tp_res_o``/``tp_res_m`` leaves that ``serve/shard.py``
+injects into each layer's attention-cache dict — the cache is the scan
+carry, so every scanned layer keeps its own residual, and the paged
+decode step threads them across tokens (prefill chunks run without
+error feedback; their shapes change per chunk). Residual leaves are
+stored **rank-major** (leading ``tp`` dim, sharded on ``tensor``):
+each device's local view is its own ``[1, ...]`` residual.
+
+Outside an active context every hook is the identity ``x @ w`` — the
+single-device engines, training, and the tests pay nothing.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist import collectives as coll
+
+__all__ = ["TPContext", "active", "current", "attn_out", "mlp_out",
+           "unembed_rows"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TPContext:
+    """Mesh-axis binding for the serving TP seams (see module doc)."""
+    axis: str = "tensor"          # TP mesh axis name
+    size: int = 1                 # devices on the TP axis
+    mode: str = "gather"          # "gather" (bit-exact) | "psum"
+    spec: object = None           # wire spec for the collectives (or None)
+    dp_axis: str = "data"         # DP mesh axis name (logit row sharding)
+    dp: int = 1                   # devices on the DP axis
+
+
+# active context bound by ``active()``; module-level is fine — tracing
+# within one context is single-threaded (same pattern as sharding._ACTIVE)
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def active(ctx: TPContext):
+    """Bind ``ctx`` for the hooks below while tracing a sharded step."""
+    _ACTIVE.append(ctx)
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def current() -> Optional[TPContext]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def _all_gather_cols(x, axis: str, size: int):
+    """All-gather a column-sharded activation's last dim, rank-ordered.
+
+    Local ``[..., c]`` -> global ``[..., size * c]`` with rank r's
+    columns at ``[r*c, (r+1)*c)`` — the inverse of slicing a
+    column-sharded projection, so the gathered activation matches the
+    unsharded layout exactly.
+    """
+    full = coll.ring_all_gather(x.reshape(-1), axis, size)
+    parts = full.reshape((size,) + x.shape)
+    return jnp.moveaxis(parts, 0, -2).reshape(
+        x.shape[:-1] + (size * x.shape[-1],))
+
+
+def _compress(x, spec, res):
+    """One wire hop with optional carried error feedback.
+
+    Returns ``(wire, new_res)``: the compressed payload and the
+    compression error of ``x + res`` (what the next step's call-site
+    adds back in). ``res=None`` means no feedback is carried (prefill).
+    """
+    if spec is None:
+        return x, (None if res is None else jnp.zeros_like(res))
+    xin = x if res is None else x + res.astype(x.dtype)
+    wire, err = coll.wire_roundtrip(xin, spec)
+    return wire, err
+
+
+def _proj_out(x, w, state, res_key: str):
+    """Shared TP seam: ``x @ w`` with the active context's collective.
+
+    ``state`` is the layer's attention-cache dict (or None): when it
+    carries a ``res_key`` leaf, the error-feedback residual is read
+    from / written back to it (rank-major ``[1, ...]`` local view).
+    """
+    ctx = current()
+    if ctx is None or ctx.size == 1:
+        return x @ w, state
+    res = state.get(res_key) if isinstance(state, dict) else None
+    if ctx.mode == "gather":
+        # compress once at the owning rank; every rank then matmuls the
+        # identical gathered wire values against the replicated w
+        wire, err = _compress(x, ctx.spec, None if res is None else res[0])
+        y = _all_gather_cols(wire, ctx.axis, ctx.size) @ w
+    else:  # psum: w arrives row-sharded; partial sums compress in transit
+        part = x @ w
+        if res is not None:
+            part = part + res[0].astype(part.dtype)
+        y, err = coll.ring_all_reduce(part, ctx.axis, ctx.size,
+                                      spec=ctx.spec)
+    if res is not None:
+        state = dict(state, **{res_key: err[None]})
+    return y, state
+
+
+def attn_out(out, wo, cache=None):
+    """The ``out @ wo`` seam after attention; returns ``(y, cache)``."""
+    return _proj_out(out, wo, cache, "tp_res_o")
+
+
+def mlp_out(hid, w2, state=None):
+    """The ``hid @ w2`` seam after the MLP gate; returns ``(y, state)``."""
+    return _proj_out(hid, w2, state, "tp_res_m")
+
+
+def unembed_rows(x, w):
+    """DP logit seam: shard the unembed matmul's batch rows over the
+    ``data`` axis and all-gather the logits (rank-ordered) so sampling
+    stays replicated. Engages only when the batch divides ``dp`` —
+    batch-1 prefill chunks fall through to the replicated matmul."""
+    ctx = current()
+    if ctx is None or ctx.dp <= 1 or x.shape[0] % ctx.dp:
+        return x @ w
+    rows = x.shape[0] // ctx.dp
+    r = lax.axis_index(ctx.dp_axis)
+    xl = lax.dynamic_slice_in_dim(x, r * rows, rows, axis=0)
+    lg = xl @ w
+    full = coll.ring_all_gather(lg.reshape(-1), ctx.dp_axis, ctx.dp,
+                                spec=ctx.spec)
+    return full.reshape((ctx.dp * rows,) + lg.shape[1:])

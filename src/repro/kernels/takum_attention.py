@@ -312,8 +312,19 @@ def paged_attention_kernel_call(q4, kw, vw, pos, start, table, *,
     unequal-length sequences into one batch). Pages past a sequence's
     ``pos`` hold stale words from previous page owners — the causal
     mask (not zero-padding) is what excludes them.
+
+    Tensor-parallel serving (serve/shard.py) slices the KV head dim:
+    each shard calls this kernel with its *local* ``Hkv/tp`` heads and
+    its ``1/tp`` slice of the pool, and the grid below iterates those
+    local heads only — the block table (and the ``pos``/``start``
+    vectors) are the same host-global arrays on every shard, so no
+    per-shard kernel variant is needed; the grid's ``hkv`` extent is
+    simply the shard's. Everything here derives from operand shapes,
+    never from a model config, which is what makes that slicing safe.
     """
     b, hkv, rows, hd = q4.shape
+    assert hkv >= 1 and q4.shape[1] == kw.shape[2], \
+        (q4.shape, kw.shape)  # local (possibly sharded) head counts agree
     num_pages = kw.shape[0]
     assert kw.shape == vw.shape == (num_pages, ps, hkv, hd), \
         (kw.shape, vw.shape)

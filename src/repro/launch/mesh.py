@@ -30,11 +30,27 @@ def dp_axes(mesh) -> tuple:
 
 def batch_spec_axes(mesh, global_batch: int) -> tuple:
     """Largest prefix of the DP axes that divides the batch (B=1 decode
-    replicates; B=128 multi-pod uses ("pod","data"))."""
+    replicates; B=128 multi-pod uses ("pod","data")).
+
+    A batch that divides *no* DP axis is a config error, not a request
+    for replication: silently returning ``()`` used to make every
+    device process the full batch — an N-fold redundant step that looks
+    like a working run with N-times-too-slow throughput. Raise instead,
+    naming the mesh and the batch; ``global_batch == 1`` (lockstep
+    decode) legitimately replicates and stays allowed.
+    """
+    if global_batch == 1:
+        return ()
     axes = []
     div = 1
     for a in dp_axes(mesh):
         if global_batch % (div * mesh.shape[a]) == 0:
             axes.append(a)
             div *= mesh.shape[a]
+    if not axes:
+        dp = {a: mesh.shape[a] for a in dp_axes(mesh)}
+        raise ValueError(
+            f"global_batch={global_batch} divides no DP axis of mesh "
+            f"{dict(mesh.shape)} (DP axes: {dp or 'none'}); pick a "
+            "batch divisible by a DP axis size or reshape the mesh")
     return tuple(axes)

@@ -19,6 +19,7 @@ from typing import Any, Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.dist import tp as _tp
 from repro.dist.sharding import annotate
 
 DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
@@ -301,7 +302,10 @@ def attention(params, x, cfg, positions, *, xa=None, mask=None,
     else:
         out = _sdpa(q, k, v, mask)
     out = out.reshape(x.shape[0], x.shape[1], h * hd)
-    out = out @ params["wo"]
+    # TP seam (dist.tp): identity ``out @ wo`` outside a sharded step;
+    # inside one, the all-gather/all-reduce collective (error-feedback
+    # residuals ride new_cache when serve/shard.py injected them)
+    out, new_cache = _tp.attn_out(out, params["wo"], new_cache)
     return annotate(out, "batch", "seq", "embed"), new_cache
 
 
@@ -322,6 +326,16 @@ def mlp_init(key, d_model, d_ff, activation, dtype=jnp.float32):
 
 
 def mlp(params, x, activation):
+    out, _ = mlp_tp(params, x, activation)
+    return out
+
+
+def mlp_tp(params, x, activation, state=None):
+    """``mlp`` with the TP seam exposed: ``state`` is the layer's
+    attention-cache dict, threaded through ``dist.tp.mlp_out`` so the
+    down-projection's error-feedback residual (``tp_res_m``) can ride
+    the scan carry next to the KV pages. Identity pass-through when no
+    TP context is active."""
     if activation == "swiglu":
         hid = jax.nn.silu(x @ params["wg"]) * (x @ params["w1"])
     elif activation == "relu2":
@@ -331,8 +345,8 @@ def mlp(params, x, activation):
     else:
         raise ValueError(activation)
     hid = annotate(hid, "batch", "seq", "ff")
-    out = hid @ params["w2"]
-    return annotate(out, "batch", "seq", "embed")
+    out, state = _tp.mlp_out(hid, params["w2"], state)
+    return annotate(out, "batch", "seq", "embed"), state
 
 
 # ---------------------------------------------------------------------------
@@ -363,9 +377,12 @@ def embed(params, tokens, dtype):
 
 def unembed(params, x, vocab: Optional[int] = None):
     if "unembed" in params:
-        logits = x @ params["unembed"]
+        w = params["unembed"]
     else:
-        logits = x @ params["embed_tokens"].T.astype(x.dtype)
+        w = params["embed_tokens"].T.astype(x.dtype)
+    # DP seam (dist.tp): plain ``x @ w`` outside a sharded step; inside
+    # one, batch rows shard over the data axis and logits all-gather
+    logits = _tp.unembed_rows(x, w)
     logits = annotate(logits.astype(jnp.float32), "batch", "seq", "vocab")
     if vocab is not None and logits.shape[-1] != vocab:
         logits = logits[..., :vocab]  # drop the vocab padding

@@ -132,7 +132,10 @@ def _block_apply(p, x, cfg: ModelConfig, kind: str, positions, *,
                                    n_experts=cfg.n_experts, top_k=cfg.top_k,
                                    capacity_factor=cfg.capacity_factor)
     else:
-        h = L.mlp(p["mlp"], L.rmsnorm(p["ln2"], x), cfg.activation)
+        # thread the attn cache dict through the MLP's TP seam so its
+        # error-feedback residual (tp_res_m) rides the same scan carry
+        h, newattn = L.mlp_tp(p["mlp"], L.rmsnorm(p["ln2"], x),
+                              cfg.activation, newattn)
     x = x + h
     newc = None if cache is None else {"attn": newattn}
     return x, aux, newc

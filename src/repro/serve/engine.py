@@ -206,6 +206,7 @@ class ServeEngine:
     preempt: bool = True              # preempt low priority under pressure
     now_fn: Optional[Callable[[], float]] = None  # scheduler clock
                                       # (deadlines/watchdog; None = wall)
+    shard: Optional[object] = None    # serve.shard.ShardPlan (None = 1 dev)
 
     def __post_init__(self):
         parse_kv_quant(self.cfg.kv_quant)  # reject typos before compiling
@@ -251,6 +252,20 @@ class ServeEngine:
         self._prefill_chunk = jax.jit(_prefill_chunk)
         self._step_paged = jax.jit(_step_paged)
         self._sample_rows = jax.jit(sample_rows)
+        if self.shard is not None and getattr(self.shard, "size", 1) > 1:
+            # multi-device plan: place the weights once, then swap the
+            # paged executables for the jit(shard_map) versions —
+            # everything above this seam (scheduler, prefix tree,
+            # preemption, quarantine) is untouched
+            from repro.serve import shard as shardmod
+            self.shard.validate(cfg)
+            mesh = self.shard.build_mesh()
+            self.params = shardmod.place_params(self.params, self.shard,
+                                                mesh)
+            steps = shardmod.ShardedSteps(self.shard, cfg, mesh=mesh)
+            self._sharded_steps = steps
+            self._prefill_chunk = steps.prefill_chunk
+            self._step_paged = steps.step_paged
 
     # -- continuous batching (paged KV pool + scheduler) -------------------
 

@@ -1,0 +1,123 @@
+"""Sharded serving: the multi-device parity pin (subprocess, 8 forced
+host devices) plus single-device unit tests for the shard plan, the
+interconnect byte census, and the mesh batch-axis guard."""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def _repo_root():
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_shard_selftest_8_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["REPRO_HOST_DEVICES"] = "8"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.serve.shard_selftest"],
+        cwd=_repo_root(), env=env, capture_output=True, text=True,
+        timeout=560)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "SHARD SELFTEST OK" in out.stdout
+
+
+# -- plan object (no devices needed) ----------------------------------------
+
+
+def _cfg():
+    from repro.configs import get_arch
+    return dataclasses.replace(get_arch("phi3-medium-14b").reduced,
+                               n_heads=16, n_kv_heads=8,
+                               kv_quant="takum8")
+
+
+def test_plan_validate_names_the_offender():
+    from repro.serve.shard import ShardPlan
+    cfg = _cfg()
+    ShardPlan(tp=4).validate(cfg)  # 16/8/192 all divide 4
+    with pytest.raises(ValueError, match="n_kv_heads=8"):
+        ShardPlan(tp=16).validate(cfg)
+    with pytest.raises(ValueError, match="'gather' or 'psum'"):
+        ShardPlan(tp=2, mode="allreduce")
+    with pytest.raises(ValueError, match="unknown format"):
+        ShardPlan(tp=2, compress="takum999x")  # typo gate at build time
+    with pytest.raises(ValueError, match="identity"):
+        ShardPlan(tp=2, compress="none")  # identity is not a wire format
+
+
+def test_make_plan_env_escape_hatch():
+    from repro.serve.shard import make_plan
+    assert make_plan(tp=2, compress="takum16", env={}).compress == "takum16"
+    for off in ("0", "off", "none", ""):
+        p = make_plan(tp=2, compress="takum16",
+                      env={"REPRO_SHARD_COMPRESS": off})
+        assert p.compress is None, off
+    p = make_plan(tp=2, compress=None,
+                  env={"REPRO_SHARD_COMPRESS": "takum8"})
+    assert p.compress == "takum8"
+
+
+def test_step_interconnect_bytes_census():
+    """The analytic byte census BENCH reports: compression scales bytes
+    by the wire width, gather-mode traffic grows with tp, tp=1 moves
+    nothing, and psum mode moves d_model-proportional bytes."""
+    from repro.serve.shard import ShardPlan
+    cfg = _cfg()
+    batch = 4
+    assert ShardPlan(tp=1).step_interconnect_bytes(cfg, batch) == 0
+    b2 = ShardPlan(tp=2).step_interconnect_bytes(cfg, batch)
+    b4 = ShardPlan(tp=4).step_interconnect_bytes(cfg, batch)
+    assert 0 < b2 < b4
+    c2 = ShardPlan(tp=2,
+                   compress="takum16").step_interconnect_bytes(cfg, batch)
+    assert c2 * 2 == b2  # takum16 wire is 2 bytes vs f32's 4
+    c8 = ShardPlan(tp=2,
+                   compress="takum8").step_interconnect_bytes(cfg, batch)
+    assert c8 * 4 == b2
+    p2 = ShardPlan(tp=2, mode="psum").step_interconnect_bytes(cfg, batch)
+    assert p2 > 0
+    d2 = ShardPlan(tp=2, dp=2).step_interconnect_bytes(cfg, batch)
+    assert d2 > b2  # the DP logit gather adds vocab-row traffic
+
+
+def test_pool_shard_bytes_divides_by_tp():
+    from repro.serve.paged import PagePool
+    from repro.serve.shard import ShardPlan
+    cfg = _cfg()
+    pool = PagePool(cfg, batch=4, num_pages=17, page_size=8,
+                    max_pages=4, alloc_device=False)
+    whole = pool.hbm_bytes()
+    assert ShardPlan(tp=4).shard_pool_bytes(pool) == whole // 4
+    assert ShardPlan(tp=1).shard_pool_bytes(pool) == whole
+
+
+# -- launch/mesh batch-axis guard (duck-typed mesh, no devices) -------------
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def test_batch_spec_axes_raises_on_indivisible_batch():
+    from repro.launch.mesh import batch_spec_axes
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    assert batch_spec_axes(mesh, 32) == ("data",)
+    assert batch_spec_axes(mesh, 1) == ()  # lockstep decode replicates
+    with pytest.raises(ValueError) as ei:
+        batch_spec_axes(mesh, 24)  # divides no DP axis
+    msg = str(ei.value)
+    assert "global_batch=24" in msg and "16" in msg and "data" in msg
+    # multi-pod prefix behaviour unchanged
+    mp = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert batch_spec_axes(mp, 64) == ("pod", "data")
+    assert batch_spec_axes(mp, 2) == ("pod",)
+    with pytest.raises(ValueError):
+        batch_spec_axes(mp, 3)

@@ -1,4 +1,4 @@
-"""BENCH_codec schema gate: schema 7 + `blocks` + prefix + fault rows.
+"""BENCH_codec schema gate: schema 8 + `blocks` + prefix/fault/shard rows.
 
     python tools/check_bench_schema.py BENCH_codec.smoke.json
 
@@ -14,8 +14,13 @@ and the matching cache-off baseline row. Schema 7 adds the
 actually firing when enabled (``preemptions >= 1`` on, ``== 0`` off)
 and the injection row must show containment (``poisoned >= 1`` with
 ``token_parity`` true — survivors bit-identical to a fault-free run).
-TTFT and goodput *magnitudes* are not gated — wall-clock comparisons
-belong in the artifact, not a CI assert.
+Schema 8 adds the ``serving_sharded`` section: tensor-parallel decode
+rows at tp in {1, 2, 4, 8}, compressed collectives on and off. The
+gates: every compress-on row moves strictly fewer interconnect bytes
+than its f32 twin, tp=1 moves zero, and tp=8 device-normalized
+throughput is >= tp=1 under both compress settings (the scaling claim
+the PR makes). TTFT and goodput *magnitudes* are not gated —
+wall-clock comparisons belong in the artifact, not a CI assert.
 """
 
 import json
@@ -32,13 +37,17 @@ OVERLOAD_FIELDS = ("n_requests", "us", "goodput_tokens_per_s",
 INJECT_FIELDS = ("n_requests", "us", "fault_rate", "fault_seed",
                  "injected", "poisoned", "unaffected", "token_parity",
                  "quarantined_pages", "path")
+SHARDED_FIELDS = ("tp", "compress", "steps", "decode_batch", "us",
+                  "tokens_per_s_wall", "tokens_per_s", "normalization",
+                  "interconnect_bytes_per_step", "pool_shard_bytes",
+                  "path")
 
 
 def check(path: str) -> None:
     with open(path) as f:
         doc = json.load(f)
-    assert doc.get("schema") == 7, \
-        f"{path}: schema {doc.get('schema')!r}, expected 7"
+    assert doc.get("schema") == 8, \
+        f"{path}: schema {doc.get('schema')!r}, expected 8"
     assert doc.get("autotune_mode") in ("0", "1", "force"), \
         f"{path}: missing/invalid autotune_mode"
     n_rows = 0
@@ -98,12 +107,42 @@ def check(path: str) -> None:
         f"{path}: a surviving request diverged — containment is broken"
     assert nar["quarantined_pages"] >= 1, \
         f"{path}: poisoned pages were not quarantined"
-    print(f"# {path}: schema 7 ok — {n_rows} kernel rows with blocks, "
+    sharded = doc.get("serving_sharded") or {}
+    for tp in (1, 2, 4, 8):
+        for side in ("on", "off"):
+            key = f"tp{tp}/{side}"
+            assert key in sharded, \
+                f"{path}: serving_sharded missing {key!r} row"
+            row = sharded[key]
+            for field in SHARDED_FIELDS:
+                # "compress" is null by design in the f32 (off) rows
+                assert field in row, \
+                    f"{path}: serving_sharded/{key} missing {field}"
+            assert row["tp"] == tp, f"{path}: {key} tp field mismatch"
+    assert sharded["tp1/off"]["interconnect_bytes_per_step"] == 0, \
+        f"{path}: tp=1 claims interconnect traffic — census is wrong"
+    for tp in (2, 4, 8):
+        on = sharded[f"tp{tp}/on"]["interconnect_bytes_per_step"]
+        off = sharded[f"tp{tp}/off"]["interconnect_bytes_per_step"]
+        assert 0 < on < off, \
+            (f"{path}: tp={tp} compressed collectives do not move fewer "
+             f"bytes (on={on}, off={off})")
+    for side in ("on", "off"):
+        t1 = sharded[f"tp1/{side}"]["tokens_per_s"]
+        t8 = sharded[f"tp8/{side}"]["tokens_per_s"]
+        assert t8 >= t1, \
+            (f"{path}: tp=8 normalized throughput {t8} < tp=1 {t1} "
+             f"(compress={side}) — sharding does not scale")
+    print(f"# {path}: schema 8 ok — {n_rows} kernel rows with blocks, "
           f"{len(roof)} roofline points, {len(on_rows)} prefix serving "
           f"pair(s), hit_rate="
           f"{[r['prefix_hit_rate'] for r in on_rows.values()]}, "
           f"preemptions={faults['overload/preempt_on']['preemptions']}, "
-          f"poisoned={nar['poisoned']} (parity ok)")
+          f"poisoned={nar['poisoned']} (parity ok), sharded tp8/tp1 "
+          f"normalized={sharded['tp8/off']['tokens_per_s']}/"
+          f"{sharded['tp1/off']['tokens_per_s']} tok/s, compressed "
+          f"bytes/step={sharded['tp8/on']['interconnect_bytes_per_step']}"
+          f" vs f32 {sharded['tp8/off']['interconnect_bytes_per_step']}")
 
 
 if __name__ == "__main__":
