@@ -29,17 +29,19 @@ kernel-parity:
 # parity pins, the scheduler fuzz (priorities / chunked prefill /
 # per-request sampling / failure events vs solo lockstep + key-schedule
 # replay), the prefix-cache property harness (refcount/COW/quarantine
-# invariants, device-free), and the failure-model suite (preemption,
-# deadlines/cancel, NaR fault injection + chaos acceptance).
+# invariants, device-free), the failure-model suite (preemption,
+# deadlines/cancel, NaR fault injection + chaos acceptance), and the
+# observability suite (obs-on/off token parity, span-tree completeness,
+# metric invariants, Perfetto export).
 serve-gate:
 	REPRO_KV_ATTN_KERNEL=0 $(PY) -m pytest -q tests/test_serve_scheduler.py \
 		tests/test_scheduler_fuzz.py tests/test_prefix_cache.py \
 		tests/test_page_pool.py tests/test_faults.py \
-		tests/test_serve_sharded.py
+		tests/test_serve_sharded.py tests/test_obs.py
 	REPRO_KV_ATTN_KERNEL=1 $(PY) -m pytest -q tests/test_serve_scheduler.py \
 		tests/test_scheduler_fuzz.py tests/test_prefix_cache.py \
 		tests/test_page_pool.py tests/test_faults.py \
-		tests/test_serve_sharded.py
+		tests/test_serve_sharded.py tests/test_obs.py
 
 # execute the fenced python snippets in the documentation (doctest-style
 # smoke: the docs cannot drift from the code silently) + the runnable
@@ -50,6 +52,7 @@ docs:
 	$(PY) examples/serve_prefix.py
 	$(PY) examples/serve_faults.py
 	$(PY) examples/serve_sharded.py
+	REPRO_OBS=2 $(PY) examples/serve_traced.py
 
 bench:
 	$(PY) -m benchmarks.run

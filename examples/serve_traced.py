@@ -1,0 +1,144 @@
+"""Observability demo: trace a chaotic serving run end to end.
+
+One small engine (CPU, seconds — ``make docs`` executes it) serves a
+mixed batch under ``REPRO_OBS=2`` — shared prefixes, a deadline, a
+mid-flight cancel, and one injected NaR fault — then shows the three
+things the obs stack produces:
+
+1. **A request-lifecycle trace.** Every submitted request gets a span
+   track (``queued`` → ``prefill``/``chunk`` → ``decode`` → terminal)
+   with prefix-hit / preempt / fault / quarantine instants; the run is
+   exported as JSONL and as a Chrome ``trace_event`` file loadable in
+   ``ui.perfetto.dev`` (or ``chrome://tracing``).
+2. **Derived per-request stats.** Queue time, TTFT, time-between-tokens
+   percentiles — carried on the ``done=True`` stream event and printed
+   as a table by ``repro.obs.report`` (also a CLI:
+   ``python -m repro.obs.report trace.jsonl``). These host stamps are
+   always on; ``REPRO_OBS`` gates the span trace and metrics.
+3. **Metrics + numeric health.** Counters/gauges/histograms sampled
+   once per scheduler tick into ring buffers: pool occupancy mirrors,
+   prefix hit counters, terminal statuses — and, at ``REPRO_OBS=2``,
+   the device-reading scans (NaR words resident in the pool). The
+   compile watcher counts JAX compilations; after warmup it is armed
+   and asserts the steady state recompiles nothing.
+
+Observability is token-neutral: the same run with ``REPRO_OBS`` unset
+generates bit-identical tokens (the serve-gate tests pin this).
+
+    PYTHONPATH=src REPRO_OBS=2 python examples/serve_traced.py
+"""
+
+import dataclasses
+import json
+import os
+import tempfile
+
+os.environ.setdefault("REPRO_OBS", "2")   # before any scheduler exists
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import model
+from repro.obs import export, report
+from repro.serve.engine import ServeEngine
+from repro.serve.faults import FaultInjector
+
+PS = 8
+
+
+class Clock:
+    """Deterministic scheduler clock: 1 ms per read."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 0.001
+        return self.t
+
+
+def main():
+    cfg = dataclasses.replace(get_arch("phi3-medium-14b").reduced,
+                              kv_quant="takum8")
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    def mk(n):
+        return list(map(int, rng.integers(0, cfg.vocab, n)))
+
+    eng = ServeEngine(params, cfg, max_len=48, page_size=PS,
+                      decode_batch=2, now_fn=Clock())
+    sched = eng.scheduler()
+    assert eng.obs is not None, "run with REPRO_OBS=1 or 2"
+    sched.injector = FaultInjector(sched.pool, rate=0.25, seed=3,
+                                   kind="nar", target="live", max_faults=1)
+
+    # a mixed chaos batch: a deadline that trips, a mid-flight cancel,
+    # and one injected NaR fault somewhere in the live set
+    rids = [eng.submit(mk(19), 5),
+            eng.submit(mk(21), 5),
+            eng.submit(mk(11), 5),
+            eng.submit(mk(PS), 5, deadline_ms=20.0)]
+    victim = eng.submit(mk(5), 8)
+    for i, ev in enumerate(eng.run()):
+        if i == 4:
+            eng.cancel(victim)
+    statuses = {r: eng.status(r) for r in rids + [victim]}
+    print(f"[serve] statuses={sorted(statuses.values())}")
+
+    # 1. export: JSONL + Chrome trace_event (Perfetto-loadable)
+    out = tempfile.mkdtemp(prefix="repro_trace_")
+    recs = eng.trace_records({"example": "serve_traced"})
+    export.write_jsonl(os.path.join(out, "trace.jsonl"), recs)
+    export.write_chrome(os.path.join(out, "trace.json"), recs)
+    chrome = json.load(open(os.path.join(out, "trace.json")))
+    print(f"[trace] {len(recs)} records -> {out}/trace.jsonl, "
+          f"{len(chrome['traceEvents'])} chrome events -> {out}/trace.json")
+    # every submitted request reached a terminal, well-closed span track
+    tr = eng.obs.tracer
+    for r in rids + [victim]:
+        assert tr.open_depth(r) == 0, f"request {r} track left open"
+        names = [s.name for s in tr.track_spans(r)]
+        assert names[0] == "request", names
+
+    # 2. derived per-request stats (always on, REPRO_OBS or not)
+    print(report.summarize(recs))
+    done_rid = next(r for r, s in statuses.items() if s == "done")
+    tm = eng.timing(done_rid)
+    assert tm.status == "done" and tm.ttft_ms > 0 and tm.total_ms > 0
+
+    # 3. metrics + a deterministic prefix hit: serve a base prompt to
+    # completion (its full pages are donated to the radix tree), then a
+    # request extending it — admission re-references the shared pages
+    sched.injector = None                # chaos over
+    base = mk(2 * PS)
+    pre1 = eng.submit(base, 4)
+    for ev in eng.run():
+        pass
+    pre2 = eng.submit(base + mk(4), 4)
+    for ev in eng.run():
+        pass
+    assert eng.status(pre1) == eng.status(pre2) == "done"
+    snap = eng.obs.metrics.snapshot()
+    terminal = {k.split(".")[-1]: int(v) for k, v in snap.items()
+                if k.startswith("sched.terminal.")}
+    print(f"[metrics] tokens={int(snap['sched.tokens'])} "
+          f"terminal={terminal} "
+          f"prefix_hit_tokens={int(snap['prefix.hit_tokens'])} "
+          f"faults={int(snap.get('faults.injected', 0))}")
+    assert snap["prefix.hit_tokens"] >= PS, "shared prefix must hit"
+    print(f"[compile] jit compiles this process: "
+          f"{int(eng.obs.compile_watcher.compiles)}")
+    eng.obs.arm_steady()                 # warmup done: recompiles are bugs
+    r2 = eng.submit(base + mk(4), 4)     # same shapes -> cache hits only
+    for ev in eng.run():
+        pass
+    assert eng.status(r2) == "done"
+    assert eng.obs.steady_state_recompiles == 0, "steady state recompiled"
+    print("[compile] steady-state recompiles: 0")
+    print("serve_traced: ok")
+
+
+if __name__ == "__main__":
+    main()

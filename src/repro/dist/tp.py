@@ -53,7 +53,11 @@ from jax import lax
 from repro.dist import collectives as coll
 
 __all__ = ["TPContext", "active", "current", "attn_out", "mlp_out",
-           "unembed_rows"]
+           "unembed_rows", "RESIDUAL_KEYS", "residual_norms"]
+
+#: The per-call-site error-feedback residual leaves ``serve/shard.py``
+#: injects into each layer's attention-cache dict (see module docstring).
+RESIDUAL_KEYS = ("tp_res_o", "tp_res_m")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,3 +170,32 @@ def unembed_rows(x, w):
     full = coll.ring_all_gather(lg.reshape(-1), ctx.dp_axis, ctx.dp,
                                 spec=ctx.spec)
     return full.reshape((ctx.dp * rows,) + lg.shape[1:])
+
+
+def residual_norms(tree) -> dict:
+    """Per-call-site L2 norms of the error-feedback residuals in a cache
+    pytree: ``{"tp_res_o/<n>": norm, ...}`` keyed by residual leaf and
+    occurrence order (one entry per scanned layer group).
+
+    This is the compressed-collective **numeric-health** signal: the
+    residual is exactly the quantisation error the last step deferred,
+    so a norm that grows without bound means error feedback is not
+    re-absorbing it (a divergence precursor long before tokens visibly
+    change). Host-side, reads device values — the scheduler samples it
+    once per tick only at ``REPRO_OBS=2``, between steps, so it never
+    touches the compiled path.
+    """
+    from jax import tree_util
+    out = {}
+    counts = {k: 0 for k in RESIDUAL_KEYS}
+    for path, leaf in tree_util.tree_flatten_with_path(tree)[0]:
+        if leaf is None:
+            continue
+        last = path[-1] if path else None
+        key = str(getattr(last, "key", last)).strip("'[]")
+        if key in counts:
+            out[f"{key}/{counts[key]}"] = float(
+                jnp.sqrt(jnp.sum(jnp.square(
+                    jnp.asarray(leaf, jnp.float32)))))
+            counts[key] += 1
+    return out

@@ -34,12 +34,19 @@ class Heartbeat:
 class Watchdog:
     def __init__(self, n_hosts: int, *, dead_after: float = 60.0,
                  straggle_factor: float = 2.0,
-                 now_fn: Callable[[], float] = time.monotonic):
+                 now_fn: Callable[[], float] = time.monotonic,
+                 on_transition: Optional[Callable[[int, str], None]] = None):
         self.n_hosts = n_hosts
         self.dead_after = dead_after
         self.straggle_factor = straggle_factor
         self.now = now_fn
         self.last: Dict[int, Heartbeat] = {}
+        # health-transition observer: called with (host, "dead"|"alive")
+        # whenever an evaluation of dead_hosts() flips a host's state —
+        # how serving telemetry (repro.obs) surfaces watchdog stalls
+        # without polling the full list itself
+        self.on_transition = on_transition
+        self._was_dead: set = set()
 
     def beat(self, hb: Heartbeat):
         self.last[hb.host] = hb
@@ -51,6 +58,13 @@ class Watchdog:
             hb = self.last.get(h)
             if hb is None or now - hb.t > self.dead_after:
                 out.append(h)
+        if self.on_transition is not None:
+            dead = set(out)
+            for h in sorted(dead - self._was_dead):
+                self.on_transition(h, "dead")
+            for h in sorted(self._was_dead - dead):
+                self.on_transition(h, "alive")
+            self._was_dead = dead
         return out
 
     def stragglers(self) -> List[int]:

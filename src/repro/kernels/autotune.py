@@ -166,6 +166,13 @@ def lookup(op: str, fmt: str, bucket: str,
     if mode() == "0":
         return None
     ent = _entry(op, fmt, bucket, backend)
+    # process-wide table traffic counters: a serving run whose misses
+    # keep climbing is running hand-picked fallback tiles — visible in
+    # the obs snapshot as autotune.hit/autotune.miss (lookup happens at
+    # trace time, so steady state adds nothing after the first compile)
+    from repro.obs.metrics import GLOBAL
+    GLOBAL.counter("autotune.hit" if ent is not None
+                   else "autotune.miss").inc()
     return None if ent is None else tuple(ent["blocks"])
 
 

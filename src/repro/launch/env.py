@@ -21,7 +21,8 @@ import os
 from typing import Callable, Dict, Optional
 
 __all__ = ["TCMALLOC_PATHS", "find_tcmalloc", "tcmalloc_active",
-           "host_env", "warn_if_no_tcmalloc"]
+           "host_env", "warn_if_no_tcmalloc", "KNOBS", "effective_knobs",
+           "audit_line", "log_config"]
 
 TCMALLOC_PATHS = (
     "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
@@ -85,3 +86,61 @@ def warn_if_no_tcmalloc(print_fn: Callable[[str], None] = print) -> bool:
     print_fn(f"# warning: tcmalloc not preloaded ({hint}); "
              "benchmark timings may be noisier")
     return False
+
+
+# ---------------------------------------------------------------------------
+# startup config audit: every REPRO_* knob the stack reads, with the
+# default each reader applies when the variable is unset. A serving or
+# bench launch logs ONE structured line up front so any run's effective
+# configuration is reconstructable from its log — the knobs change
+# dispatch (attention kernel, LUT decode), numerics (shard compression,
+# fault injection) and measurement (autotune, observability), and a run
+# whose knobs are unknown is a run whose numbers are unexplainable.
+
+KNOBS: Dict[str, str] = {
+    "REPRO_OBS": "0",                 # 0 off | 1 trace+metrics | 2 +numeric
+    "REPRO_KV_ATTN_KERNEL": "auto",   # fused-attention dispatch (0/1/auto)
+    "REPRO_AUTOTUNE": "1",            # block autotuner (0/1/force)
+    "REPRO_AUTOTUNE_CACHE": "",       # sweep cache path ("" = ./.repro_autotune.json)
+    "REPRO_LUT_DECODE": "",           # LUT decode override ("" = per-format auto)
+    "REPRO_CAUSAL_SKIP": "0",         # skip fully-masked KV tiles
+    "REPRO_FAULT_RATE": "0",          # injected faults per scheduler tick
+    "REPRO_FAULT_SEED": "0",          # fault injector PRNG seed
+    "REPRO_FAULT_KIND": "nar",        # nar | flip
+    "REPRO_SHARD_COMPRESS": "",       # TP collective compression override
+    "REPRO_HOST_DEVICES": "",         # forced XLA host device count
+}
+
+
+def effective_knobs(env: Optional[Dict[str, str]] = None
+                    ) -> Dict[str, Dict[str, object]]:
+    """Each knob's effective value: ``{"value": str, "set": bool}``.
+
+    ``set`` distinguishes an explicit setting from the reader's default
+    — ``REPRO_AUTOTUNE=1`` and an unset variable behave identically but
+    audit differently (one was a decision)."""
+    env = os.environ if env is None else env
+    out: Dict[str, Dict[str, object]] = {}
+    for name, default in KNOBS.items():
+        raw = env.get(name)
+        out[name] = {"value": default if raw is None else raw,
+                     "set": raw is not None}
+    return out
+
+
+def audit_line(env: Optional[Dict[str, str]] = None) -> str:
+    """The one-line startup config audit: every knob as ``NAME=value``,
+    explicit settings marked with ``!``, prefixed ``# repro-config``
+    (greppable, comment-shaped so it is inert in piped JSONL logs)."""
+    knobs = effective_knobs(env)
+    parts = [f"{n}={k['value'] or '(unset)'}{'!' if k['set'] else ''}"
+             for n, k in sorted(knobs.items())]
+    return "# repro-config " + " ".join(parts)
+
+
+def log_config(print_fn: Callable[[str], None] = print,
+               env: Optional[Dict[str, str]] = None) -> str:
+    """Emit (and return) the startup audit line."""
+    line = audit_line(env)
+    print_fn(line)
+    return line

@@ -12,7 +12,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch
+from repro.launch.env import log_config
 from repro.models import model
+from repro.obs import enabled as obs_enabled
 from repro.serve.engine import ServeEngine, quantize_weights
 
 
@@ -27,7 +29,14 @@ def main():
     ap.add_argument("--weights", default="none",
                     help="'takum8'/'takum16' weight-only quantisation")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Perfetto-loadable Chrome trace of the "
+                    "run (requires REPRO_OBS=1 or 2)")
     args = ap.parse_args()
+
+    log_config()
+    if args.trace and not obs_enabled():
+        ap.error("--trace needs REPRO_OBS=1 (or 2) in the environment")
 
     spec = get_arch(args.arch)
     cfg = spec.reduced if args.reduced else spec.config
@@ -61,6 +70,18 @@ def main():
           f"({total_new / dt:.1f} tok/s)")
     for o in outs[:2]:
         print(" ...", o[-args.max_new:])
+    if args.trace:
+        # the paged scheduler recorded spans while generate() ran; media
+        # runs fall back to lockstep, which has no per-request trace
+        if eng.obs is None:
+            print("# no trace written: this run used the lockstep path "
+                  "(media prompt or unsupported family)")
+        else:
+            from repro.obs import export
+            export.write_chrome(args.trace,
+                                eng.trace_records({"arch": args.arch}))
+            print(f"# chrome trace -> {args.trace} "
+                  "(load in ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,284 @@
+"""Counters, gauges, histograms — and the recompile detector.
+
+:class:`MetricsRegistry` is a name → instrument map with per-tick ring
+buffers: the scheduler calls :meth:`MetricsRegistry.sample` once per
+tick, which appends ``(tick, t, value)`` to each instrument's bounded
+deque, so a finished run carries a time series (pool occupancy over the
+whole chaos run, batch occupancy through an overload burst) without
+unbounded growth. ``snapshot()`` gives current values as a plain dict;
+``dump()`` gives a Prometheus-flavoured text block for logs.
+
+Naming convention: ``<subsystem>.<what>`` (``pool.in_use``,
+``sched.preemptions``, ``prefix.hit_tokens``, ``autotune.hit``,
+``jax.recompiles_steady_state``, ``tp.res_norm/<site>``). The full
+catalogue lives in ``docs/observability.md``.
+
+:class:`CompileWatcher` turns the retrace bug class PR 9 hit by hand
+into a counter: ``jax.monitoring`` fires a duration event per *actual*
+XLA compile (``/jax/core/compile/backend_compile_duration``) and per
+jaxpr retrace — and fires **nothing** on a cache hit — so after
+:meth:`CompileWatcher.arm` (call once warmed up), any further compile
+increments ``jax.recompiles_steady_state``. A steady-state serving
+loop must keep that counter at zero; the BENCH gate and the fuzz suite
+both assert it. The module keeps ONE listener registered with JAX for
+the whole process (``jax.monitoring`` has no deregister API) and
+dispatches to live watchers, so tests can create and drop watchers
+freely.
+
+There is also a process-wide :data:`GLOBAL` registry for counters that
+belong to no particular serving loop (autotune table hits/misses,
+fake-quant saturation at weight-load time); per-scheduler registries
+stay isolated so concurrent engines in one process don't cross-count.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "GLOBAL",
+           "CompileWatcher"]
+
+
+class Counter:
+    """Monotonically non-decreasing count. ``inc`` with a negative
+    amount raises — monotonicity is one of the fuzz invariants."""
+
+    kind = "counter"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value: float = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError(f"counter {self.name}: negative inc {amount}")
+        self.value += amount
+
+    def get(self) -> float:
+        return self.value
+
+
+class Gauge:
+    """Point-in-time value (pool occupancy, batch fill)."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value: float = 0.0
+
+    def set(self, value: float) -> None:
+        self.value = float(value)
+
+    def get(self) -> float:
+        return self.value
+
+
+class Histogram:
+    """Fixed-bucket histogram with sum/count (latency distributions).
+
+    ``buckets`` are upper bounds; an implicit +inf bucket catches the
+    rest. ``get()`` reports the count so ring-buffer sampling of a
+    histogram still yields a monotone series.
+    """
+
+    kind = "histogram"
+    DEFAULT_BUCKETS = (0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0,
+                       250.0, 500.0, 1000.0, 2500.0)
+
+    def __init__(self, name: str,
+                 buckets: Optional[Tuple[float, ...]] = None):
+        self.name = name
+        self.buckets = tuple(sorted(buckets or self.DEFAULT_BUCKETS))
+        self.counts = [0] * (len(self.buckets) + 1)
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, value: float) -> None:
+        self.sum += value
+        self.count += 1
+        for i, ub in enumerate(self.buckets):
+            if value <= ub:
+                self.counts[i] += 1
+                return
+        self.counts[-1] += 1
+
+    def get(self) -> float:
+        return float(self.count)
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+
+class MetricsRegistry:
+    """Get-or-create instrument registry with per-tick ring buffers."""
+
+    def __init__(self, *, ring: int = 4096,
+                 now_fn: Optional[Callable[[], float]] = None):
+        self.now = now_fn or time.monotonic
+        self.ring = ring
+        self._instruments: Dict[str, Any] = {}
+        self._series: Dict[str, Deque[Tuple[int, float, float]]] = {}
+
+    def _get(self, name: str, cls, *args):
+        inst = self._instruments.get(name)
+        if inst is None:
+            inst = self._instruments[name] = cls(name, *args)
+        elif not isinstance(inst, cls):
+            raise TypeError(f"metric {name!r} is a {inst.kind}, "
+                            f"not a {cls.__name__.lower()}")
+        return inst
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str,
+                  buckets: Optional[Tuple[float, ...]] = None) -> Histogram:
+        if name in self._instruments:
+            return self._get(name, Histogram)
+        return self._get(name, Histogram, buckets)
+
+    # -- sampling -----------------------------------------------------
+    def sample(self, tick: int) -> None:
+        """Append every instrument's current value to its ring buffer."""
+        t = self.now()
+        for name, inst in self._instruments.items():
+            series = self._series.get(name)
+            if series is None:
+                series = self._series[name] = deque(maxlen=self.ring)
+            series.append((tick, t, inst.get()))
+
+    def series(self, name: str) -> List[Tuple[int, float, float]]:
+        return list(self._series.get(name) or ())
+
+    def snapshot(self) -> Dict[str, float]:
+        return {name: inst.get()
+                for name, inst in sorted(self._instruments.items())}
+
+    def dump(self) -> str:
+        """Prometheus-flavoured text exposition (for logs, not scrape)."""
+        lines = []
+        for name, inst in sorted(self._instruments.items()):
+            lines.append(f"# TYPE {name} {inst.kind}")
+            if isinstance(inst, Histogram):
+                cum = 0
+                for ub, c in zip(inst.buckets, inst.counts):
+                    cum += c
+                    lines.append(f'{name}_bucket{{le="{ub}"}} {cum}')
+                lines.append(f'{name}_bucket{{le="+Inf"}} {inst.count}')
+                lines.append(f"{name}_sum {inst.sum}")
+                lines.append(f"{name}_count {inst.count}")
+            else:
+                lines.append(f"{name} {inst.get()}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def reset(self) -> None:
+        self._instruments.clear()
+        self._series.clear()
+
+
+#: Process-wide registry for loop-independent counters (autotune cache
+#: hits/misses, fake-quant saturation). Serving loops get their own.
+GLOBAL = MetricsRegistry()
+
+
+# -- recompile detector ----------------------------------------------
+
+_WATCHERS: List["CompileWatcher"] = []
+_LISTENER_INSTALLED = False
+_LOCK = threading.Lock()
+
+#: jax.monitoring event keys that mean "an actual compile or retrace
+#: happened" (cache hits fire nothing — verified empirically on the
+#: pinned jax; a backend compile also fires a jaxpr trace first, so the
+#: two keys over-count *events* but any hit past arm() is a real bug).
+_COMPILE_EVENT_MARKERS = ("backend_compile", "jaxpr_trace")
+
+
+def _dispatch(event: str, duration: float, **kwargs: Any) -> None:
+    if not any(m in event for m in _COMPILE_EVENT_MARKERS):
+        return
+    with _LOCK:
+        watchers = list(_WATCHERS)
+    for w in watchers:
+        w._on_compile(event, duration)
+
+
+def _install_listener() -> None:
+    global _LISTENER_INSTALLED
+    if _LISTENER_INSTALLED:
+        return
+    from jax import monitoring  # local: keep repro.obs import-cheap
+    monitoring.register_event_duration_secs_listener(_dispatch)
+    _LISTENER_INSTALLED = True
+
+
+class CompileWatcher:
+    """Counts JAX compiles/retraces; armed, they become a defect count.
+
+    ``compiles`` counts backend (XLA) compiles, ``retraces`` counts
+    jaxpr traces (a superset: every compile retraces, and a pure
+    retrace that hits the lowering cache still counts — it's still
+    Python-side work inside the serving loop). After :meth:`arm`,
+    backend compiles additionally bump ``steady_state_recompiles``,
+    mirrored into the owning registry as
+    ``jax.recompiles_steady_state``.
+    """
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry
+        self.compiles = 0
+        self.retraces = 0
+        self.compile_secs = 0.0
+        self.armed = False
+        self.steady_state_recompiles = 0
+        self._started = False
+
+    def start(self) -> "CompileWatcher":
+        if not self._started:
+            _install_listener()
+            with _LOCK:
+                _WATCHERS.append(self)
+            self._started = True
+        return self
+
+    def stop(self) -> None:
+        if self._started:
+            with _LOCK:
+                if self in _WATCHERS:
+                    _WATCHERS.remove(self)
+            self._started = False
+
+    def arm(self) -> None:
+        self.armed = True
+        if self.registry is not None:
+            self.registry.counter("jax.recompiles_steady_state")
+
+    def _on_compile(self, event: str, duration: float) -> None:
+        if "backend_compile" in event:
+            self.compiles += 1
+            self.compile_secs += duration
+            if self.registry is not None:
+                self.registry.counter("jax.compiles").inc()
+            if self.armed:
+                self.steady_state_recompiles += 1
+                if self.registry is not None:
+                    self.registry.counter(
+                        "jax.recompiles_steady_state").inc()
+        else:
+            self.retraces += 1
+            if self.registry is not None:
+                self.registry.counter("jax.retraces").inc()
+
+    def __enter__(self) -> "CompileWatcher":
+        return self.start()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.stop()

@@ -80,6 +80,25 @@ def sample_rows(logits, keys, temps, top_ps):
 
 _DEFAULT_SKIP = ("embed", "unembed", "scale", "norm")
 
+# per-format largest finite magnitude, cached by name: decode every word
+# of the format once and mask the non-finite (NaR) entry. The identity
+# codec has no finite cap (and 2^32 words), so it reports inf.
+_FMT_MAX: dict = {}
+
+
+def _format_max(spec) -> float:
+    if spec.is_identity:
+        return float("inf")
+    if spec.name not in _FMT_MAX:
+        # int32 ramp then cast: a uint16 arange over 2^16 words would
+        # wrap before the cast for 16-bit formats
+        words = jnp.arange(2 ** spec.n, dtype=jnp.int32) \
+                   .astype(spec.word_dtype)
+        vals = spec.decode_tile(words, jnp.float32)
+        finite = jnp.where(jnp.isfinite(vals), jnp.abs(vals), 0.0)
+        _FMT_MAX[spec.name] = float(jnp.max(finite))
+    return _FMT_MAX[spec.name]
+
 
 def quantize_weights(params, fmt: str = "takum8", *,
                      mode: str = "fake",
@@ -143,6 +162,14 @@ def quantize_weights(params, fmt: str = "takum8", *,
     wire_leaves = {"wq", "wk", "wv", "wo", "wg", "wr", "w1", "w2"}
     counts = {"wired": 0, "fake": 0, "skipped": 0, "non_matrix": 0}
     matched: set = set()
+    # numeric-health telemetry (REPRO_OBS only): count weights whose
+    # magnitude exceeds the format's unscaled finite range — the
+    # population fake-quant clamps to the grid edge (linear takum's
+    # per-tensor centring usually rescues them; the counter says how
+    # often the format is living at its range limit regardless)
+    from repro import obs as obsmod
+    from repro.obs.metrics import GLOBAL as _metrics
+    sat_on = obsmod.enabled()
 
     def visit(path, leaf):
         parts = [str(getattr(p, "key", p)).strip("'[]") for p in path]
@@ -157,6 +184,12 @@ def quantize_weights(params, fmt: str = "takum8", *,
             return leaf
         named = parts and parts[-1] in wire_leaves \
             and jnp.issubdtype(leaf.dtype, jnp.floating)
+        if sat_on and jnp.issubdtype(leaf.dtype, jnp.floating):
+            fmax = _format_max(spec)
+            if fmax < float("inf"):
+                _metrics.counter("quant.saturated").inc(
+                    int(jnp.sum(jnp.abs(leaf) > fmax)))
+                _metrics.counter("quant.elems").inc(int(leaf.size))
         if mode == "wire" and named and leaf.ndim > 3:
             raise ValueError(
                 f"quantize_weights(mode='wire'): {name!r} is on the wire "
@@ -311,6 +344,11 @@ class ServeEngine:
         if prev is not None:
             # a resize must not lose finished results or reuse rids
             self._sched.adopt_finished(prev)
+            if prev.obs is not None:
+                # detach the old bundle's compile watcher — otherwise
+                # every resize leaks a live listener into the module
+                # registry and steady-state recompile counts double up
+                prev.obs.close()
         self._sched_key = key
         return self._sched
 
@@ -365,6 +403,25 @@ class ServeEngine:
         call this after reading the result so host memory stays
         bounded."""
         self.scheduler().forget(rid)
+
+    def timing(self, rid: int):
+        """Derived latency stats for a request
+        (:class:`repro.obs.trace.RequestTiming` — queue/TTFT/TBT/total
+        ms on the scheduler clock). Always available; ``REPRO_OBS``
+        gates the span trace, not these host stamps."""
+        return self.scheduler().timing(rid)
+
+    @property
+    def obs(self):
+        """The scheduler's observability bundle
+        (:class:`repro.obs.ServeObs`), or ``None`` when no scheduler has
+        been built yet or ``REPRO_OBS`` is off."""
+        return None if self._sched is None else self._sched.obs
+
+    def trace_records(self, meta: Optional[dict] = None) -> List[dict]:
+        """The serving trace as JSONL-shaped records (see
+        ``repro.obs.export``). Requires ``REPRO_OBS>=1``."""
+        return self.scheduler().trace_records(meta)
 
     def _can_schedule(self, media) -> bool:
         """Whether ``generate`` can route through the paged scheduler:

@@ -53,7 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -107,6 +107,11 @@ class FaultInjector:
         self.max_faults = max_faults
         self._rng = np.random.default_rng(seed)
         self.injected: List[FaultRecord] = []
+        # observer(record) fires on every injection — the scheduler
+        # wires it to the obs event stream so faults are visible in a
+        # trace, not just in this ledger. Never consulted for targeting:
+        # observation cannot change the deterministic fault schedule.
+        self.observer: Optional[Callable[[FaultRecord], None]] = None
 
     # -- target selection --------------------------------------------------
 
@@ -165,6 +170,8 @@ class FaultInjector:
                           key=key, rep=rep, offset=(pi, head, elem),
                           kind=self.kind)
         self.injected.append(rec)
+        if self.observer is not None:
+            self.observer(rec)
         return rec
 
     def step(self, tick: int) -> List[FaultRecord]:

@@ -46,7 +46,7 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -299,6 +299,36 @@ class PagePool:
     def hbm_bytes(self) -> int:
         """Total pool HBM footprint (every layer's K and V pages)."""
         return self.num_pages * self.page_hbm_bytes()
+
+    def scan_nar(self, pages: Optional[Sequence[int]] = None) -> int:
+        """Count stored NaR words across ``pages`` (default: every
+        allocated page), all layers, K and V — the pool's numeric-health
+        scan (``REPRO_OBS=2`` samples it once per scheduler tick).
+
+        The count is an **over-approximation of live corruption**:
+        positions past a sequence's ``pos`` may hold stale words from
+        previous owners (recycled pages are not zeroed), and a stale NaR
+        there is never read. A count that *rises* while the allocated
+        set is stable is the actionable signal — fresh NaR words are
+        landing in pages someone owns. Reads device arrays (one sync per
+        call); for the identity codec NaN plays the NaR role.
+        """
+        if self.cache is None:
+            raise PagePoolError("pool built with alloc_device=False has "
+                                "no device cache")
+        import jax.numpy as jnp
+        ids = sorted(self._refs) if pages is None \
+            else sorted({int(p) for p in pages})
+        if not ids:
+            return 0
+        idx = jnp.asarray(np.asarray(ids, np.int32))
+        counts = []
+        for attn in self._attn_nodes(self.cache):
+            for key in ("k", "v"):
+                arr = attn[key][:, idx]
+                counts.append(jnp.isnan(arr).sum() if self.spec.is_identity
+                              else (arr == self.spec.nar_word).sum())
+        return int(sum(counts))
 
     def stats(self) -> PageStats:
         return PageStats(num_pages=self.num_pages, page_size=self.page_size,

@@ -91,6 +91,14 @@ class PrefixCache:
         self._root: Dict[Tuple[int, ...], _Node] = {}
         self._nodes = 0
         self._ticks = itertools.count()
+        # monotone tree-traffic counters (repro.obs samples them per
+        # scheduler tick; the hit/miss split is what makes a cold cache
+        # distinguishable from a disabled one in a trace)
+        self.lookups = 0          # plan() calls
+        self.hits = 0             # plans that shared at least one page
+        self.hit_tokens = 0       # prompt positions served from the tree
+        self.nodes_inserted = 0   # nodes ever donated (insert)
+        self.nodes_evicted = 0    # nodes ever dropped (LRU + containment)
 
     # -- lookup / planning -------------------------------------------------
 
@@ -128,8 +136,13 @@ class PrefixCache:
             suffix_start = plen - 1
         else:
             suffix_start = matched * self.page_size
-        return PrefixPlan(shared=tuple(n.page for n in path),
+        plan = PrefixPlan(shared=tuple(n.page for n in path),
                           cow_src=cow_src, suffix_start=suffix_start)
+        self.lookups += 1
+        if plan.hit_tokens:
+            self.hits += 1
+            self.hit_tokens += plan.hit_tokens
+        return plan
 
     def acquire(self, prompt: Sequence[int], plan: PrefixPlan) -> None:
         """Reference ``plan.shared`` for a new block table and bump the
@@ -166,6 +179,7 @@ class PrefixCache:
                 children[chunk] = node
                 self._nodes += 1
                 created += 1
+                self.nodes_inserted += 1
             else:
                 node.tick = tick
             children = node.children
@@ -197,6 +211,7 @@ class PrefixCache:
         siblings = leaf.parent.children if leaf.parent else self._root
         del siblings[leaf.chunk]
         self._nodes -= 1
+        self.nodes_evicted += 1
         self.pool.unref(leaf.page)
         return True
 
@@ -236,6 +251,7 @@ class PrefixCache:
                 stack.extend((node.children, c)
                              for c in node.children.values())
         self._nodes -= removed
+        self.nodes_evicted += removed
         return removed
 
     def clear(self) -> None:
@@ -247,3 +263,11 @@ class PrefixCache:
     def pages_held(self) -> int:
         """Tree-referenced pages (== node count: one ref per node)."""
         return self._nodes
+
+    def stats(self) -> Dict[str, int]:
+        """Tree-traffic counters + current size, as a plain dict (the
+        obs metric names ``prefix.*`` mirror these keys)."""
+        return {"nodes": self._nodes, "lookups": self.lookups,
+                "hits": self.hits, "hit_tokens": self.hit_tokens,
+                "nodes_inserted": self.nodes_inserted,
+                "nodes_evicted": self.nodes_evicted}

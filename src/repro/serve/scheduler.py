@@ -94,6 +94,8 @@ from typing import Callable, Dict, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.ft.watchdog import Heartbeat, Watchdog
+from repro.obs import obs_from_env
+from repro.obs.trace import SCHED_TRACK, RequestTiming
 from repro.serve.faults import injector_from_env
 from repro.serve.paged import AdmissionError, PagePool, pages_for
 from repro.serve.prefix import PrefixCache, PrefixPlan
@@ -144,6 +146,15 @@ class Request:
     slot: int = -1
     pages: Tuple[int, ...] = ()
     submit_tick: int = 0
+    # host timestamps on the scheduler clock (always stamped — three
+    # float stores per token; the obs span trace is what REPRO_OBS
+    # gates). tok_times[i] is when generated[i] was read on the host.
+    t_submit: float = 0.0
+    t_admit: Optional[float] = None     # first pages secured
+    t_first: Optional[float] = None     # first generated token
+    t_end: Optional[float] = None       # terminal transition
+    tok_times: List[float] = dataclasses.field(default_factory=list)
+    _timing: object = None              # terminal RequestTiming snapshot
     # prefill progress (state == "prefilling")
     _contig: object = None      # private contiguous cache
     _cursor: int = 0            # next prompt position to prefill
@@ -176,11 +187,30 @@ class StreamEvent:
 
     ``status`` is ``"ok"`` on every token event; a request that fails
     emits exactly one terminal event with ``token=-1``, ``done=True``
-    and ``status`` in ``("timeout", "cancelled", "poisoned")``."""
+    and ``status`` in ``("timeout", "cancelled", "poisoned")``.
+
+    ``t`` is the event's timestamp on the scheduler clock (the
+    injectable ``now_fn`` — monotonic seconds by default, a test's fake
+    clock under test), so TTFT and inter-token gaps are measurable from
+    the stream itself. The ``done=True`` event additionally carries the
+    request's full derived :class:`~repro.obs.trace.RequestTiming`
+    (queue/TTFT/TBT/total — also retrievable later via
+    ``Scheduler.timing``). Both fields are stamped unconditionally;
+    ``REPRO_OBS`` gates the span trace, not these."""
     rid: int
     token: int
     done: bool
     status: str = "ok"
+    t: float = 0.0
+    timing: Optional[RequestTiming] = None
+
+    def matches(self, rid: int, token: int, done: bool,
+                status: str = "ok") -> bool:
+        """Equality on the stream payload, ignoring the timing fields
+        (what tests pin: timestamps depend on the clock, tokens must
+        not)."""
+        return (self.rid, self.token, self.done, self.status) == \
+            (rid, token, done, status)
 
 
 class Scheduler:
@@ -232,8 +262,14 @@ class Scheduler:
         # injector ("env": built from REPRO_FAULT_RATE/_SEED/_KIND,
         # which default to off)
         self._now: Callable[[], float] = now_fn or time.monotonic
-        self.watchdog = Watchdog(1, dead_after=stall_after,
-                                 now_fn=self._now)
+        # observability bundle (None when REPRO_OBS=0/unset): span
+        # tracer + metrics registry + compile watcher, all on the
+        # scheduler clock. Every hook below is a None-check — obs must
+        # be token-neutral AND near-free when off.
+        self.obs = obs_from_env(self._now)
+        self.watchdog = Watchdog(
+            1, dead_after=stall_after, now_fn=self._now,
+            on_transition=None if self.obs is None else self._obs_host)
         self._pending: List[StreamEvent] = []
         self.preempt = preempt
         self.preemptions = 0
@@ -298,16 +334,24 @@ class Scheduler:
         self._next_rid += 1
         if deadline_ms is not None and deadline_ms <= 0:
             raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
+        now = self._now()
         req = Request(rid=rid, prompt=prompt, max_new=max_new,
                       eos_id=self.engine.eos_id if eos_id is None else eos_id,
                       pages_needed=needed, priority=priority,
                       temperature=temperature, top_p=top_p, seed=seed,
                       deadline=(None if deadline_ms is None
-                                else self._now() + deadline_ms / 1000.0),
-                      submit_tick=self._tick)
+                                else now + deadline_ms / 1000.0),
+                      submit_tick=self._tick, t_submit=now)
         self._requests[rid] = req
         self._queue.append(req)
         self.prompt_tokens_submitted += len(prompt)
+        if self.obs is not None:
+            tr = self.obs.tracer
+            tr.begin(rid, "request", t=now, prompt_tokens=len(prompt),
+                     max_new=max_new, priority=priority,
+                     pages_needed=needed)
+            tr.begin(rid, "queued", t=now)
+            self.obs.metrics.counter("sched.requests_submitted").inc()
         return rid
 
     def result(self, rid: int) -> List[int]:
@@ -330,6 +374,24 @@ class Scheduler:
         if rid not in self._requests:
             raise KeyError(f"unknown or forgotten request id {rid}")
         return self._requests[rid].state
+
+    def timing(self, rid: int) -> RequestTiming:
+        """Derived latency stats for a request (queue/TTFT/TBT/total
+        milliseconds on the scheduler clock). Terminal requests return
+        the frozen terminal snapshot (the same object the ``done=True``
+        stream event carried); in-flight requests a live partial view
+        (``total_ms`` up to now). Always available — the host stamps
+        behind it are unconditional, not ``REPRO_OBS``-gated."""
+        if rid not in self._requests:
+            raise KeyError(f"unknown or forgotten request id {rid}")
+        req = self._requests[rid]
+        if req._timing is not None:
+            return req._timing
+        return RequestTiming.from_stamps(
+            req.rid, req.state, t_submit=req.t_submit,
+            t_admit=req.t_admit, t_first=req.t_first,
+            tok_times=req.tok_times,
+            t_end=req.t_end if req.t_end is not None else self._now())
 
     def cancel(self, rid: int) -> bool:
         """Cancel a request mid-flight: pages released (COW refcounts
@@ -377,9 +439,17 @@ class Scheduler:
         every generated token as a :class:`StreamEvent` (terminal
         failure events included — every submitted request produces
         exactly one ``done=True`` event)."""
+        obs = self.obs
         while (self._queue or self._pending
                or any(s is not None for s in self._slots)):
             self._tick += 1
+            if obs is not None:
+                # (re)wire the injector's observer lazily: tests and the
+                # chaos bench install injectors after construction
+                inj = self.injector
+                if inj is not None and getattr(inj, "observer", 1) is None:
+                    inj.observer = self._obs_fault
+                obs.tracer.begin(SCHED_TRACK, "tick", tick=self._tick)
             self._heartbeat()
             if self.injector is not None:
                 self.injector.step(self._tick)
@@ -389,10 +459,102 @@ class Scheduler:
             yield from self._prefill_tick()
             yield from self._decode_step()
             yield from self._drain_pending()
+            if obs is not None:
+                self._obs_sample()
+                obs.tracer.end(SCHED_TRACK, "tick")
 
     def _drain_pending(self) -> Iterator[StreamEvent]:
         events, self._pending = self._pending, []
         yield from events
+
+    # -- observability hooks (every call site is None-guarded) -------------
+
+    def _obs_host(self, host: int, state: str) -> None:
+        """Watchdog health transition -> scheduler-track instant."""
+        self.obs.tracer.instant(SCHED_TRACK, f"watchdog_{state}",
+                                host=host)
+        self.obs.metrics.counter(f"watchdog.{state}").inc()
+
+    def _obs_fault(self, rec) -> None:
+        """FaultRecord -> instant on the owning request's track (the
+        slot's occupant at injection time; scheduler track otherwise)."""
+        req = (self._slots[rec.slot]
+               if 0 <= rec.slot < len(self._slots) else None)
+        track = req.rid if req is not None else SCHED_TRACK
+        self.obs.tracer.instant(track, "fault", tick=rec.tick,
+                                page=rec.page, kind=rec.kind,
+                                key=rec.key, slot=rec.slot)
+        self.obs.metrics.counter("faults.injected").inc()
+
+    def _finish(self, req: Request) -> RequestTiming:
+        """Stamp the terminal transition: freeze the request's derived
+        timing, emit the terminal instant, close its span track, and
+        feed the latency histograms. Called exactly once per request
+        (every terminal path funnels through _fail or _release)."""
+        req.t_end = self._now()
+        tm = RequestTiming.from_stamps(
+            req.rid, req.state, t_submit=req.t_submit,
+            t_admit=req.t_admit, t_first=req.t_first,
+            tok_times=req.tok_times, t_end=req.t_end)
+        req._timing = tm
+        if self.obs is not None:
+            tr = self.obs.tracer
+            tr.instant(req.rid, "terminal", t=req.t_end, status=req.state,
+                       n_tokens=tm.n_tokens)
+            tr.close_track(req.rid, t=req.t_end, status=req.state)
+            m = self.obs.metrics
+            m.counter(f"sched.terminal.{req.state}").inc()
+            if tm.n_tokens:
+                m.histogram("sched.ttft_ms").observe(tm.ttft_ms)
+                m.histogram("sched.tbt_ms_p99").observe(tm.tbt_ms_p99)
+        return tm
+
+    def _obs_sample(self) -> None:
+        """Once per tick: mirror the pool/queue/tree state into gauges
+        and append every instrument to its ring buffer. At numeric
+        level (``REPRO_OBS=2``) also the device-reading health scans:
+        pool NaR words and TP error-feedback residual norms."""
+        m = self.obs.metrics
+        st = self.pool.stats()
+        m.gauge("pool.free").set(st.free)
+        m.gauge("pool.in_use").set(st.in_use)
+        m.gauge("pool.peak_in_use").set(st.peak_in_use)
+        m.gauge("pool.shared_pages").set(st.shared_pages)
+        m.gauge("pool.prefix_hit_tokens").set(st.prefix_hit_tokens)
+        m.gauge("pool.quarantined").set(st.quarantined)
+        m.gauge("sched.queue_depth").set(len(self._queue))
+        m.gauge("sched.batch_active").set(
+            sum(1 for s in self._slots
+                if s is not None and s.state == "active"))
+        m.gauge("sched.batch_prefilling").set(
+            sum(1 for s in self._slots
+                if s is not None and s.state == "prefilling"))
+        if self.prefix is not None:
+            for key, val in self.prefix.stats().items():
+                m.gauge(f"prefix.{key}").set(val)
+        if self.obs.numeric and self.pool.cache is not None:
+            m.gauge("pool.nar_words").set(self.pool.scan_nar())
+            from repro.dist.tp import residual_norms
+            for site, norm in residual_norms(self.pool.cache).items():
+                m.gauge(f"tp.res_norm/{site}").set(norm)
+        m.sample(self._tick)
+
+    def trace_records(self, meta: Optional[dict] = None) -> List[dict]:
+        """The run's trace as JSONL-shaped records (spans + instants +
+        one ``timing`` record per terminal request still remembered).
+        Raises unless ``REPRO_OBS`` enabled tracing at construction."""
+        if self.obs is None:
+            raise RuntimeError("tracing is off: construct the scheduler "
+                               "with REPRO_OBS=1 (or 2)")
+        from repro.obs import export
+        timings = [r._timing for r in self._requests.values()
+                   if r._timing is not None]
+        info = {"page_size": self.page_size,
+                "num_pages": self.pool.num_pages,
+                "decode_batch": self.decode_batch,
+                "kv_quant": self.pool.spec.name}
+        info.update(meta or {})
+        return export.trace_records(self.obs.tracer, timings, meta=info)
 
     # -- failure paths -----------------------------------------------------
 
@@ -416,7 +578,9 @@ class Scheduler:
             # device table must not keep them installed for this slot
             self.pool.push_tables()
         req.state = status
-        self._pending.append(StreamEvent(req.rid, -1, True, status))
+        tm = self._finish(req)
+        self._pending.append(StreamEvent(req.rid, -1, True, status,
+                                         t=req.t_end, timing=tm))
 
     def _poison(self, req: Request) -> None:
         """Fail ``req`` as poisoned and quarantine every page of its
@@ -430,6 +594,9 @@ class Scheduler:
             self.pool.quarantine(p)
         if self.prefix is not None:
             self.prefix.evict_pages(pages)
+        if self.obs is not None:
+            self.obs.tracer.instant(req.rid, "quarantine",
+                                    pages=sorted(pages))
         self._fail(req, "poisoned")
 
     def _check_deadlines(self) -> None:
@@ -535,6 +702,16 @@ class Scheduler:
         req.submit_tick = self._tick
         self._queue.append(req)
         self.preemptions += 1
+        if self.obs is not None:
+            tr = self.obs.tracer
+            now = self._now()
+            # close the phase spans but keep the "request" root open —
+            # the lifecycle continues; re-admission re-enters "queued"
+            tr.close_track(req.rid, t=now, keep=1, preempted=True)
+            tr.instant(req.rid, "preempt", t=now, tick=self._tick,
+                       generated=len(req.generated))
+            tr.begin(req.rid, "queued", t=now, requeue=True)
+            self.obs.metrics.counter("sched.preemptions").inc()
 
     def _secure_pages(self, req: Request) -> bool:
         """Reserve ``req``'s worst-case pages: shared prefix pages by
@@ -597,6 +774,19 @@ class Scheduler:
         req.slot = slot
         self._slots[slot] = req
         self._plan_gather = None
+        now = self._now()
+        if req.t_admit is None:    # first admission only: a preempted
+            req.t_admit = now      # request keeps its original queue_ms
+        if self.obs is not None:
+            tr = self.obs.tracer
+            tr.end(req.rid, "queued", t=now)
+            tr.begin(req.rid, "prefill", t=now, slot=slot, plen=plen,
+                     cursor=req._cursor)
+            if plan.hit_tokens:
+                tr.instant(req.rid, "prefix_hit", t=now,
+                           tokens=plan.hit_tokens,
+                           shared_pages=len(plan.shared),
+                           cow=plan.cow_src is not None)
 
     # -- chunked prefill ---------------------------------------------------
 
@@ -642,11 +832,16 @@ class Scheduler:
             chunk = stream[req._cursor:req._cursor + ps]
             tokens = np.zeros((1, ps), np.int32)
             tokens[0, :len(chunk)] = chunk
+            if self.obs is not None:
+                self.obs.tracer.begin(req.rid, "chunk",
+                                      pos=req._cursor, n=len(chunk))
             row, req._contig = eng._prefill_chunk(
                 eng.params, jnp.asarray(tokens), req._contig,
                 jnp.asarray(req._cursor, jnp.int32),
                 jnp.asarray(len(chunk) - 1, jnp.int32))
             req._cursor += len(chunk)
+            if self.obs is not None:
+                self.obs.tracer.end(req.rid, "chunk")
             if req._cursor < plen:
                 continue
             if bool(np.isnan(np.asarray(row)).any()):
@@ -674,12 +869,24 @@ class Scheduler:
                 self.prefix.insert(stream, req.pages[:plen // ps])
             req.state = "active"
             req.generated.append(tok0)
+            now = self._now()
+            req.t_first = now
+            req.tok_times.append(now)
             self.pool.assign(slot, req.pages, pos=plen)
             activated = True
+            if self.obs is not None:
+                tr = self.obs.tracer
+                tr.end(req.rid, "prefill", t=now)
+                tr.instant(req.rid, "first_token", t=now, token=tok0)
+                tr.begin(req.rid, "decode", t=now)
+                self.obs.metrics.counter("sched.tokens").inc()
             done = tok0 == req.eos_id or len(req.generated) >= req.max_new
+            tm = None
             if done:
                 self._release(req)
-            events.append(StreamEvent(req.rid, tok0, done))
+                tm = self._finish(req)
+            events.append(StreamEvent(req.rid, tok0, done,
+                                      t=now, timing=tm))
         if activated:
             self.pool.push_tables()
         yield from events
@@ -695,6 +902,9 @@ class Scheduler:
                   if s is not None and s.state == "active"]
         if not active:
             return
+        if self.obs is not None:
+            self.obs.tracer.begin(SCHED_TRACK, "decode_step",
+                                  batch=len(active))
         eng = self.engine
         w = self.decode_batch
         tok = np.zeros((w, 1), np.int32)
@@ -732,6 +942,11 @@ class Scheduler:
         # legitimately): a bad row means this request's block-table
         # pages fed corruption into its logits — poison exactly it
         bad_rows = np.asarray(bad)
+        # one clock read shared by every row: the step's tokens all
+        # became host-visible at the same blocking read above
+        now = self._now()
+        if self.obs is not None:
+            self.obs.tracer.end(SCHED_TRACK, "decode_step", t=now)
         events = []
         released = False
         for i in active:
@@ -739,13 +954,22 @@ class Scheduler:
             if bad_rows[i]:
                 self._poison(req)
                 continue
-            t = int(toks[i, 0])
-            req.generated.append(t)
-            done = t == req.eos_id or len(req.generated) >= req.max_new
+            tk = int(toks[i, 0])
+            req.generated.append(tk)
+            if req.t_first is None:
+                req.t_first = now
+            req.tok_times.append(now)
+            if self.obs is not None:
+                self.obs.tracer.instant(req.rid, "token", t=now, token=tk)
+                self.obs.metrics.counter("sched.tokens").inc()
+            done = tk == req.eos_id or len(req.generated) >= req.max_new
+            tm = None
             if done:
                 self._release(req)
                 released = True
-            events.append(StreamEvent(req.rid, t, done))
+                tm = self._finish(req)
+            events.append(StreamEvent(req.rid, tk, done,
+                                      t=now, timing=tm))
         if released:
             # commit the cleared slots before any yield: an abandoned
             # stream must not resume with freed (and possibly

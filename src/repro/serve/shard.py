@@ -201,6 +201,20 @@ class ShardPlan:
             elems += (self.dp - 1) * batch * padded_vocab(cfg.vocab)
         return int(elems * per)
 
+    def describe(self, cfg=None, batch: Optional[int] = None) -> dict:
+        """Plain-dict self-description for config audits and traces
+        (``launch.env.log_config`` and the obs run metadata embed it).
+        With ``cfg``/``batch`` the analytic per-step interconnect bytes
+        are included."""
+        spec = self.wire_spec()
+        out = {"tp": self.tp, "dp": self.dp, "mode": self.mode,
+               "compress": None if spec is None else spec.name,
+               "devices": self.size}
+        if cfg is not None and batch is not None:
+            out["interconnect_bytes_per_step"] = \
+                self.step_interconnect_bytes(cfg, batch)
+        return out
+
 
 # -- pytree -> PartitionSpec trees ------------------------------------------
 

@@ -34,7 +34,7 @@ from repro.configs import get_arch
 from repro.models import model
 from repro.serve.engine import ServeEngine
 from repro.serve.faults import FaultInjector, injector_from_env
-from repro.serve.scheduler import TERMINAL, RequestFailed, StreamEvent
+from repro.serve.scheduler import TERMINAL, RequestFailed
 
 PS = 8
 
@@ -204,7 +204,7 @@ def test_cancel_queued_and_inflight(base_cfg, params):
     sched = eng.scheduler()
     stream = sched.run()
     events = [next(stream)]           # r1's buffered terminal event first
-    assert events[0] == StreamEvent(r1, -1, True, "cancelled")
+    assert events[0].matches(r1, -1, True, "cancelled")
     while not any(e.rid == r3 and e.status == "ok" for e in events):
         events.append(next(stream))
     assert eng.cancel(r3) is True
@@ -262,8 +262,8 @@ def test_queued_deadline_and_zero_validation(base_cfg, params):
     rid = eng.submit(p1, 4, deadline_ms=100.0)
     clk.t = 1.0                        # expires while still queued
     events = _drain(eng)
-    assert [e for e in events if e.rid == rid] == \
-        [StreamEvent(rid, -1, True, "timeout")]
+    (ev,) = [e for e in events if e.rid == rid]
+    assert ev.matches(rid, -1, True, "timeout")
     with pytest.raises(RequestFailed) as ei:
         eng.result(rid)
     assert ei.value.tokens == []
@@ -416,8 +416,8 @@ def test_unservable_after_quarantine_fails_definitively(base_cfg, params):
     rid = eng.submit(p, 6)              # needs 2 pages: can never fit
     events = _drain(sched)
     assert sched.status(rid) == "cancelled"
-    assert [e for e in events if e.rid == rid] == \
-        [StreamEvent(rid, -1, True, "cancelled")]
+    (ev,) = [e for e in events if e.rid == rid]
+    assert ev.matches(rid, -1, True, "cancelled")
     assert sched.pool.release_quarantined() == 2
     rid2 = eng.submit(p, 6)             # repaired pool serves again
     _drain(sched)

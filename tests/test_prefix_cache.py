@@ -62,10 +62,15 @@ class _Sim:
         self.prefix = PrefixCache(self.pool)
         self.live = {}
         self._rids = itertools.count()
+        self.plans = 0                  # our side of the lookups ledger
+
+    def plan(self, prompt):
+        self.plans += 1
+        return self.prefix.plan(prompt)
 
     def admit(self, prompt, max_new):
         ps = self.pool.page_size
-        plan = self.prefix.plan(prompt)
+        plan = self.plan(prompt)
         needed = pages_for(len(prompt) + max_new - 1, ps)
         n_private = needed - len(plan.shared)
         assert n_private >= 1, "admission always computes >= 1 page"
@@ -144,6 +149,15 @@ def _check(sim):
     assert logical >= pool.pages_in_use()
     if pool.shared_pages():
         assert logical > pool.pages_in_use()
+    # the tree-traffic ledger (what the obs `prefix.*` gauges mirror):
+    # insert/evict counters reconcile with the live node count exactly,
+    # and every plan() call is one lookup, hit or not
+    tree = sim.prefix.stats()
+    assert tree["nodes"] == len(tree_pages)
+    assert tree["nodes_inserted"] - tree["nodes_evicted"] == tree["nodes"]
+    assert tree["lookups"] == sim.plans
+    assert 0 <= tree["hits"] <= tree["lookups"]
+    assert (tree["hit_tokens"] == 0) == (tree["hits"] == 0)
 
 
 def _prompt(a, b):
@@ -332,8 +346,8 @@ def test_evict_pages_removes_whole_subtrees():
     assert removed == 3, "descendants of the corrupted page must go too"
     assert sim.prefix.pages_held() == 1          # the sibling stream
     # sibling still warm (full hit: all but the COW carve-out token)
-    assert sim.prefix.plan(other).hit_tokens == PS - 1
-    assert sim.prefix.plan(long_p).hit_tokens == 0
+    assert sim.plan(other).hit_tokens == PS - 1
+    assert sim.plan(long_p).hit_tokens == 0
     # table refs survived the tree eviction; no quarantine in this test,
     # so releasing recycles the pages straight back to the free list
     _check(sim)
@@ -359,13 +373,13 @@ def test_plan_shapes_cold_warm_and_divergent(a, b, cut):
     sim = _Sim(num_pages=24)
     prompt = _prompt(a, b)
     plen = len(prompt)
-    cold = sim.prefix.plan(prompt)
+    cold = sim.plan(prompt)
     assert cold.shared == () and cold.cow_src is None
     assert cold.suffix_start == 0 and cold.hit_tokens == 0
     rid = sim.admit(prompt, max_new=4)
     assert rid is not None
 
-    warm = sim.prefix.plan(prompt)
+    warm = sim.plan(prompt)
     n_prompt_pages = plen // PS          # full pages the tree can hold
     if n_prompt_pages:
         # full hit: everything cached up to the last token's page
@@ -384,7 +398,7 @@ def test_plan_shapes_cold_warm_and_divergent(a, b, cut):
     # divergence: keep `cut` tokens, then leave the base alphabet (0..5)
     # entirely — the tail chunk can never match a cached node
     div = prompt[:cut] + [7] * PS
-    dplan = sim.prefix.plan(div)
+    dplan = sim.plan(div)
     full_match = min(cut, plen) // PS
     assert dplan.cow_src is None, "mid-page divergence never copies"
     assert len(dplan.shared) == full_match
@@ -419,7 +433,7 @@ def test_divergent_copy_is_exactly_one_page():
     sim = _Sim(num_pages=24)
     prompt = BASES[1][:2 * PS]
     sim.admit(prompt, max_new=2)
-    plan = sim.prefix.plan(prompt)
+    plan = sim.plan(prompt)
     assert plan.cow_src is not None
     before = sim.pool.pages_in_use()
     rid = sim.admit(prompt, max_new=1)           # 1 prompt copy + 0 extra

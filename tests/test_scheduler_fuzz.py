@@ -294,3 +294,96 @@ def test_submit_validates_sampling_params(base_cfg, params):
     with pytest.raises(ValueError, match="top_p"):
         eng.submit([1, 2, 3], 2, top_p=1.5)
     assert eng.scheduler().pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# observability: token-neutral under fuzz, spans complete, metrics honest
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["oracle", "kernel"])
+def test_fuzz_obs_invariants(base_cfg, params, use_kernel, monkeypatch):
+    """The failure fuzz with ``REPRO_OBS=1``: the stream must stay
+    bit-identical to the obs-off run of the same mix, every terminal
+    request's span track must be fully closed and rooted at
+    ``request``, sampled counters must be monotone, and the pool/prefix
+    gauges must equal ``stats()`` at *every* tick, not just at drain."""
+    from repro.models import layers as L
+    from repro.serve.scheduler import TERMINAL
+    monkeypatch.setattr(L, "KV_ATTN_KERNEL", use_kernel)
+    cfg = dataclasses.replace(base_cfg, kv_quant="takum8")
+
+    class FakeClock:
+        def __init__(self):
+            self.t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    def run_once(obs_on):
+        if obs_on:
+            monkeypatch.setenv("REPRO_OBS", "1")
+        else:
+            monkeypatch.delenv("REPRO_OBS", raising=False)
+        rng = np.random.default_rng(901)
+        clk = FakeClock()
+        eng = _engine(params, cfg, decode_batch=2, num_pages=8,
+                      now_fn=clk)
+        sched = eng.scheduler()
+        ticks = {"n": 0}
+        if obs_on:
+            m = sched.obs.metrics
+            orig = sched._obs_sample
+
+            def sampled():
+                orig()
+                st = sched.pool.stats()
+                for f in ("free", "in_use", "peak_in_use",
+                          "shared_pages", "quarantined"):
+                    assert m.gauge(f"pool.{f}").get() == getattr(st, f)
+                for key, val in sched.prefix.stats().items():
+                    assert m.gauge(f"prefix.{key}").get() == val
+                ticks["n"] += 1
+
+            monkeypatch.setattr(sched, "_obs_sample", sampled)
+        prompts, max_news, prios = _random_batch(rng, cfg, n=5)
+        deadlines = [None if rng.random() < 0.5
+                     else float(rng.integers(2, 30)) * 1000.0
+                     for _ in range(5)]
+        rids = [eng.submit(p, mx, priority=pr, deadline_ms=d)
+                for p, mx, pr, d in zip(prompts, max_news, prios,
+                                        deadlines)]
+        victim = rids[int(rng.integers(0, 5))]
+        payloads = []
+        for ev in eng.run():
+            payloads.append((ev.rid, ev.token, ev.done, ev.status))
+            clk.t += float(rng.random())
+            if len(payloads) == 2:
+                eng.cancel(victim)
+        assert (ticks["n"] == sched._tick) or not obs_on
+        return eng, rids, payloads
+
+    eng_off, rids, pay_off = run_once(False)
+    eng_on, rids_on, pay_on = run_once(True)
+    assert rids_on == rids
+    assert pay_on == pay_off                 # observation changed nothing
+    tr = eng_on.obs.tracer
+    m = eng_on.obs.metrics
+    for rid in rids:
+        assert eng_on.status(rid) in TERMINAL
+        assert eng_on.status(rid) == eng_off.status(rid)
+        assert tr.open_depth(rid) == 0
+        spans = tr.track_spans(rid)
+        assert spans[0].name == "request"
+        assert all(s.t1 is not None and s.t1 >= s.t0 for s in spans)
+    terminals = [i for i in tr.instants if i.name == "terminal"]
+    assert sorted(i.track for i in terminals) == sorted(rids)
+    n_done = sum(m.counter(f"sched.terminal.{s}").get() for s in TERMINAL)
+    assert n_done == len(rids)
+    assert m.counter("sched.requests_submitted").get() == len(rids)
+    for name in ("sched.tokens", "sched.requests_submitted"):
+        vals = [v for _, _, v in m.series(name)]
+        assert vals == sorted(vals)          # counters are monotone
+    assert m.counter("sched.tokens").get() == \
+        sum(1 for p in pay_on if p[1] >= 0)
